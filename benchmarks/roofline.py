@@ -1,0 +1,113 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline markdown table.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh 16x16] [--md]
+
+Per (arch x shape x mesh): the three roofline terms (seconds), the dominant
+bottleneck, bytes/device, MODEL_FLOPS / HLO_FLOPS utilization ratio, and a
+one-line "what would move the dominant term down" note.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+NOTES = {
+    ("collective", "moe"): "explicit shard_map all-to-all EP dispatch in "
+    "place of GSPMD's gather/scatter resharding of the (E,C,D) buckets",
+    ("collective", "dense"): "2D-shard FFN activations / reduce-scatter "
+    "grads instead of all-reduce; overlap psum with matmuls",
+    ("collective", "ssm"): "keep time-scan state device-local; remove "
+    "resharding at scan boundaries",
+    ("memory", "any"): "larger microbatch or less aggressive remat; fuse "
+    "elementwise chains; bf16 activations",
+    ("compute", "any"): "already compute-bound — approach peak via MXU-"
+    "aligned tiles",
+}
+
+
+def note_for(dominant: str, arch: str) -> str:
+    kind = "moe" if ("arctic" in arch or "deepseek" in arch) else \
+        ("ssm" if ("rwkv" in arch or "zamba" in arch) else "dense")
+    for key in ((dominant, kind), (dominant, "any")):
+        if key in NOTES:
+            return NOTES[key]
+    return ""
+
+
+def load_cells(out_dir="experiments/dryrun"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "?"
+    return f"{b / 2**30:.2f}G"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = load_cells(args.out)
+    if args.mesh:
+        cells = [c for c in cells if c["mesh"] == args.mesh]
+
+    def roof_of(c):
+        """Prefer scan-trip-count-corrected terms (see dryrun.py)."""
+        if "corrected" in c:
+            return c["corrected"]["roofline"], c["corrected"].get(
+                "useful_flops_ratio"), "*"
+        return c["roofline"], c.get("useful_flops_ratio"), ""
+
+    hdr = ("| arch | shape | mesh | opts | compute_s | memory_s | "
+           "collective_s | dominant | peak_B/dev | useful_flops | "
+           "bound-note |")
+    print(hdr)
+    print("|" + "---|" * 11)
+    for c in cells:
+        r, ratio, star = roof_of(c)
+        dom = r["dominant"].replace("_s", "")
+        ratio_s = f"{ratio:.2f}{star}" if ratio else "-"
+        opts = ",".join(c.get("opts", [])) or "base"
+        print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | {opts} "
+              f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+              f"| {r['collective_s']:.2e} | **{dom}** "
+              f"| {fmt_bytes(c['memory']['peak_bytes'])} "
+              f"| {ratio_s} | {note_for(dom, c['arch'])[:60]} |")
+
+    # summary: worst roofline fraction (useful/total on dominant axis)
+    print()
+
+    def ratio_of(c):
+        return roof_of(c)[1]
+
+    worst = sorted((c for c in cells if ratio_of(c)),
+                   key=ratio_of)[:5]
+    print("# worst useful-flops ratios (hillclimb candidates):")
+    for c in worst:
+        print(f"#   {c['arch']} x {c['shape']} x {c['mesh']}: "
+              f"{ratio_of(c):.3f}")
+    most_coll = sorted(
+        cells, key=lambda c: -(roof_of(c)[0]["collective_s"]
+                               / max(sum([roof_of(c)[0]['compute_s'],
+                                          roof_of(c)[0]['memory_s'],
+                                          roof_of(c)[0]['collective_s']]),
+                                     1e-30)))[:5]
+    print("# most collective-bound:")
+    for c in most_coll:
+        r = roof_of(c)[0]
+        tot = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        print(f"#   {c['arch']} x {c['shape']} x {c['mesh']}: "
+              f"{r['collective_s'] / tot:.1%} of step")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,253 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows (plus commentary lines starting
+with '#').  Mapping to the paper:
+
+  speedup        Fig. 1 (runtime bars): full-batch vs Algorithm 1 vs
+                 Algorithm 2 per-iteration wall time; speedup ratios.
+  n_independence Thm 1(1): Algorithm 2 iteration time is independent of n
+                 (the full-batch baseline scales ~n^2).
+  quality        Figs. 2-13: ARI/NMI of all algorithms on matched datasets.
+  tau_sweep      Appendix C: quality vs tau in {50,100,200,300}.
+  rates          §6 claim 2: beta learning rate vs sklearn rate.
+  gamma_table    Table 1: gamma per (dataset x kernel).
+  termination    Thm 1(2): iterations-to-stop vs 1/epsilon.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    Gaussian, MBConfig, adjusted_rand_index, fit, gamma_of,
+    normalized_mutual_info, predict,
+)
+from repro.core import fullbatch, lloyd, untruncated
+from repro.core.minibatch import make_step, sample_batch
+from repro.core.state import init_state, window_size
+from repro.data import blobs, circles, moons
+from repro.data.graph_kernels import heat_kernel, knn_kernel
+
+GAUSS = Gaussian(kappa=jnp.float32(1.0))
+
+
+def _time_step(fn, iters=10, warmup=2):
+    for _ in range(warmup):
+        out = fn()
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+# ----------------------------------------------------------------- speedup
+def bench_speedup(fast: bool):
+    ns = [2048, 8192] if fast else [2048, 8192, 16384]
+    k, b, tau, d = 10, 512, 200, 32
+    for n in ns:
+        x, _ = blobs(n=n, d=d, k=k, seed=0)
+        x = jnp.asarray(x)
+        cfg = MBConfig(k=k, batch_size=b, tau=tau, max_iters=5,
+                       epsilon=-1.0)
+        init_idx = jnp.arange(k, dtype=jnp.int32)
+
+        # full batch (the O(n^2) baseline)
+        fb_step = jax.jit(fullbatch.make_fullbatch_step(GAUSS, k))
+        assign0 = jnp.zeros((n,), jnp.int32)
+        t_fb = _time_step(lambda: fb_step(assign0, x)[0], iters=3)
+
+        # Algorithm 1 (DP, O(n(b+k)))
+        dp_step = jax.jit(untruncated.make_dp_step(GAUSS, cfg))
+        dps = untruncated.init_dp_state(x, init_idx, GAUSS)
+        bidx = sample_batch(jax.random.PRNGKey(0), n, b)
+        t_dp = _time_step(lambda: dp_step(dps, x, bidx)[0].sqnorm)
+
+        # Algorithm 2 (truncated, O(k(tau+b)^2), n-independent)
+        st = init_state(x, init_idx, GAUSS, window_size(b, tau))
+        mb_step = jax.jit(make_step(GAUSS, cfg))
+        t_mb = _time_step(lambda: mb_step(st, x, bidx)[0].sqnorm)
+
+        print(f"speedup_fullbatch_n{n},{t_fb:.0f},1.0x")
+        print(f"speedup_alg1_n{n},{t_dp:.0f},{t_fb / t_dp:.1f}x")
+        print(f"speedup_alg2_n{n},{t_mb:.0f},{t_fb / t_mb:.1f}x")
+
+
+def bench_n_independence(fast: bool):
+    k, b, tau, d = 10, 256, 100, 16
+    times = []
+    ns = [4096, 16384] if fast else [4096, 16384, 65536]
+    for n in ns:
+        x, _ = blobs(n=n, d=d, k=k, seed=0)
+        x = jnp.asarray(x)
+        cfg = MBConfig(k=k, batch_size=b, tau=tau, max_iters=5,
+                       epsilon=-1.0)
+        st = init_state(x, jnp.arange(k, dtype=jnp.int32), GAUSS,
+                        window_size(b, tau))
+        step = jax.jit(make_step(GAUSS, cfg))
+        bidx = sample_batch(jax.random.PRNGKey(0), n, b)
+        t = _time_step(lambda: step(st, x, bidx)[0].sqnorm)
+        times.append(t)
+        print(f"n_independence_n{n},{t:.0f},iter_time_us")
+    ratio = times[-1] / times[0]
+    print(f"n_independence_ratio,{ratio:.2f},"
+          f"~1.0 expected across {ns[-1] // ns[0]}x n growth")
+
+
+# ----------------------------------------------------------------- quality
+def _mb_fit_ari(xj, kern, k, b, tau, rate, y, seed, iters=80):
+    cfg = MBConfig(k=k, batch_size=b, tau=tau, rate=rate, max_iters=iters,
+                   epsilon=-1.0)
+    st, _ = fit(xj, kern, cfg, jax.random.PRNGKey(seed), early_stop=False)
+    pred = np.asarray(predict(st, xj, xj, kern))
+    return (adjusted_rand_index(y, pred), normalized_mutual_info(y, pred))
+
+
+def bench_quality(fast: bool):
+    reps = 2 if fast else 3
+    datasets = {
+        "blobs": (lambda s: blobs(n=2000, d=16, k=8, seed=s), 8, "gaussian"),
+        "circles": (lambda s: circles(n=1500, seed=s), 2, "heat"),
+        "moons": (lambda s: moons(n=1500, seed=s), 2, "heat"),
+    }
+    for dname, (gen, k, kname) in datasets.items():
+        rows = {m: [] for m in ["full", "mb_beta", "mb_sklearn",
+                                "trunc_beta", "nonkernel_mb"]}
+        for s in range(reps):
+            x, y = gen(s)
+            if kname == "gaussian":
+                kern, xj = GAUSS, jnp.asarray(x)
+            else:
+                kern, xi = heat_kernel(x, k=10, t=2000.0)
+                kern = jax.tree.map(jnp.asarray, kern)
+                xj = jnp.asarray(xi)
+            t0 = time.perf_counter()
+            a_fb, _ = fullbatch.fit(xj, kern, k, jax.random.PRNGKey(s),
+                                    max_iters=30)
+            t_fb = time.perf_counter() - t0
+            rows["full"].append(
+                (adjusted_rand_index(y, np.asarray(a_fb)), t_fb))
+            for rate, row, keep_t in (("beta", "mb_beta", True),
+                                      ("sklearn", "mb_sklearn", False)):
+                # untruncated mini-batch == Algorithm 1 (DP) — NOT Alg2
+                # with a giant window (whose O(k W^2) Gram would explode)
+                cfg_u = MBConfig(k=k, batch_size=256, tau=0, rate=rate,
+                                 max_iters=80, epsilon=-1.0)
+                t0 = time.perf_counter()
+                st_u, _ = untruncated.fit(xj, kern, cfg_u,
+                                          jax.random.PRNGKey(s),
+                                          early_stop=False)
+                pred = np.asarray(untruncated.assignments(st_u, xj, kern))
+                rows[row].append((adjusted_rand_index(y, pred),
+                                  time.perf_counter() - t0 if keep_t
+                                  else 0))
+            t0 = time.perf_counter()
+            ari, _ = _mb_fit_ari(xj, kern, k, 256, 200, "beta", y, s)
+            rows["trunc_beta"].append((ari, time.perf_counter() - t0))
+            _, assign, _ = lloyd.minibatch_kmeans_fit(
+                jnp.asarray(x), k, jax.random.PRNGKey(s), batch_size=256,
+                rate="beta", max_iters=80)
+            rows["nonkernel_mb"].append(
+                (adjusted_rand_index(y, np.asarray(assign)), 0))
+        for m, vals in rows.items():
+            aris = [v[0] for v in vals]
+            ts = [v[1] for v in vals if v[1]]
+            tstr = f"{np.mean(ts) * 1e6:.0f}" if ts else ""
+            print(f"quality_{dname}_{m},{tstr},"
+                  f"ARI={np.mean(aris):.3f}+-{np.std(aris):.3f}")
+
+
+def bench_tau_sweep(fast: bool):
+    x, y = circles(n=1500, seed=0)
+    kern, xi = heat_kernel(x, k=10, t=2000.0)
+    kern = jax.tree.map(jnp.asarray, kern)
+    xj = jnp.asarray(xi)
+    for tau in [50, 100, 200, 300]:
+        t0 = time.perf_counter()
+        ari, nmi = _mb_fit_ari(xj, kern, 2, 256, tau, "beta", y, 0)
+        dt = (time.perf_counter() - t0) * 1e6
+        print(f"tau_sweep_{tau},{dt:.0f},ARI={ari:.3f}")
+
+
+def bench_rates(fast: bool):
+    """beta vs sklearn, kernel AND non-kernel (fills Schwartzman'23 gap)."""
+    x, y = blobs(n=2000, d=16, k=8, seed=1)
+    xj = jnp.asarray(x)
+    for rate in ["beta", "sklearn"]:
+        ari, _ = _mb_fit_ari(xj, GAUSS, 8, 256, 200, rate, y, 0)
+        print(f"rates_kernel_{rate},,ARI={ari:.3f}")
+        objs = []
+        for s in range(2):
+            c, a, h = lloyd.minibatch_kmeans_fit(
+                xj, 8, jax.random.PRNGKey(s), batch_size=256, rate=rate,
+                max_iters=60)
+            objs.append(adjusted_rand_index(y, np.asarray(a)))
+        print(f"rates_nonkernel_{rate},,ARI={np.mean(objs):.3f}")
+
+
+def bench_gamma_table(fast: bool):
+    """Table 1 reproduction: gamma per dataset x kernel."""
+    sets = {"circles": circles(n=1000, seed=0),
+            "moons": moons(n=1000, seed=0),
+            "blobs": blobs(n=1000, d=16, k=8, seed=0)}
+    for dname, (x, _) in sets.items():
+        print(f"gamma_{dname}_gaussian,,"
+              f"{float(gamma_of(GAUSS, jnp.asarray(x))):.4f}")
+        kk, xi = knn_kernel(x, k=10)
+        g1 = float(gamma_of(jax.tree.map(jnp.asarray, kk), jnp.asarray(xi)))
+        print(f"gamma_{dname}_knn,,{g1:.4f}")
+        kh, xih = heat_kernel(x, k=10, t=2000.0)
+        g2 = float(gamma_of(jax.tree.map(jnp.asarray, kh),
+                            jnp.asarray(xih)))
+        print(f"gamma_{dname}_heat,,{g2:.4f}")
+
+
+def bench_termination(fast: bool):
+    """Thm 1(2): iterations to early-stop scale ~ 1/epsilon (gamma = 1)."""
+    x, _ = blobs(n=4000, d=16, k=8, seed=0)
+    xj = jnp.asarray(x)
+    for eps in [0.04, 0.02, 0.01, 0.005]:
+        iters = []
+        for s in range(2 if fast else 3):
+            cfg = MBConfig(k=8, batch_size=512, tau=200, epsilon=eps,
+                           max_iters=400)
+            _, hist = fit(xj, GAUSS, cfg, jax.random.PRNGKey(s))
+            iters.append(len(hist))
+        print(f"termination_eps{eps},,iters={np.mean(iters):.1f}")
+
+
+BENCHES = {
+    "speedup": bench_speedup,
+    "n_independence": bench_n_independence,
+    "quality": bench_quality,
+    "tau_sweep": bench_tau_sweep,
+    "rates": bench_rates,
+    "gamma_table": bench_gamma_table,
+    "termination": bench_termination,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true")
+    args, _ = ap.parse_known_args()
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name} ---")
+        t0 = time.time()
+        fn(args.fast)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

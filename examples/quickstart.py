@@ -1,0 +1,39 @@
+"""Quickstart: mini-batch kernel k-means on non-linearly-separable data.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Plain k-means cannot separate two concentric circles; kernel k-means with a
+graph heat kernel nails it — and the mini-batch algorithm (the paper's
+contribution) does so while touching only b points per iteration.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    MBConfig, adjusted_rand_index, fit, gamma_of, predict,
+)
+from repro.core.lloyd import kmeans_fit
+from repro.data import circles
+from repro.data.graph_kernels import heat_kernel
+
+x, y = circles(n=2000, seed=0)
+
+# 1) plain k-means fails
+_, assign_plain, _ = kmeans_fit(jnp.asarray(x), 2, jax.random.PRNGKey(0))
+print(f"plain k-means      ARI = "
+      f"{adjusted_rand_index(y, np.asarray(assign_plain)):.3f}")
+
+# 2) truncated mini-batch kernel k-means (Algorithm 2)
+kern, xi = heat_kernel(x, k=10, t=2000.0)
+kern = jax.tree.map(jnp.asarray, kern)
+xi = jnp.asarray(xi)
+print(f"heat-kernel gamma  = {float(gamma_of(kern, xi)):.4f}  (<< 1, "
+      "so Theorem 1 allows a tiny batch)")
+
+cfg = MBConfig(k=2, batch_size=256, tau=200, epsilon=1e-4, max_iters=200)
+state, hist = fit(xi, kern, cfg, jax.random.PRNGKey(0))
+pred = np.asarray(predict(state, xi, xi, kern))
+print(f"mini-batch kernel  ARI = {adjusted_rand_index(y, pred):.3f}  "
+      f"({len(hist)} iterations, early-stopped, "
+      f"window = {cfg.tau}+{cfg.batch_size} points/center)")

@@ -1,0 +1,12 @@
+"""arctic-480b [moe]: 128 experts top-2 + parallel dense residual FFN.
+[hf:Snowflake/snowflake-arctic-base]  35L d_model=7168 56H (GQA kv=8)
+d_ff=4864 vocab=32000."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8, head_dim=128,
+    d_ff=4864, vocab=32000, mlp="swiglu",
+    moe=True, n_experts=128, top_k=2, moe_d_ff=4864,
+    dense_residual=True,
+)

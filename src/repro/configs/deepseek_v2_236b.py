@@ -1,0 +1,13 @@
+"""deepseek-v2-236b [moe]: MLA (kv_lora=512) + 2 shared + 160 routed top-6.
+[arXiv:2405.04434; hf]  60L d_model=5120 128H d_ff=1536 vocab=102400."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b", family="moe",
+    n_layers=60, d_model=5120, n_heads=128, n_kv_heads=128,
+    d_ff=12288,                          # dense-equivalent (shared path)
+    vocab=102400, mlp="swiglu",
+    mla=True, kv_lora=512, q_lora=1536,
+    rope_head_dim=64, nope_head_dim=128, v_head_dim=128,
+    moe=True, n_experts=160, n_shared_experts=2, top_k=6, moe_d_ff=1536,
+)

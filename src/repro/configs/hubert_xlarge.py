@@ -1,0 +1,13 @@
+"""hubert-xlarge [audio]: encoder-only (bidirectional), w2v2-style backbone;
+conv feature extractor is a STUB (precomputed frame embeddings).
+[arXiv:2106.07447]  48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504.
+Encoder-only => decode_32k / long_500k cells are skipped (DESIGN.md)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", family="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16, head_dim=80,
+    d_ff=5120, vocab=504, mlp="gelu",
+    causal=False,
+    frontend="stub", frontend_dim=512,
+)

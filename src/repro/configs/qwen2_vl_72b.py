@@ -1,0 +1,13 @@
+"""qwen2-vl-72b [vlm]: qwen2-72b backbone + M-RoPE + dynamic-resolution
+vision frontend (STUB: precomputed patch embeddings, per instructions).
+[arXiv:2409.12191; hf]  80L d_model=8192 64H (GQA kv=8) d_ff=29568."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=29568, vocab=152064, mlp="swiglu",
+    qkv_bias=True, rope_theta=1e6,
+    mrope_sections=(16, 24, 24),
+    frontend="stub", frontend_dim=1280,
+)

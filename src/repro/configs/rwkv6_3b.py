@@ -1,0 +1,11 @@
+"""rwkv6-3b "Finch" [ssm]: attention-free, data-dependent per-channel decay.
+[arXiv:2404.05892; hf]  32L d_model=2560 d_ff=8960 vocab=65536.
+Attention-free => runs the long_500k cell (O(1)-state decode)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b", family="ssm",
+    n_layers=32, d_model=2560, n_heads=40, n_kv_heads=40,
+    d_ff=8960, vocab=65536,
+    ssm_head_dim=64,
+)

@@ -1,0 +1,37 @@
+"""The assigned input-shape set (one per LM arch; 40 nominal cells) and the
+applicability rules from DESIGN.md §6."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+from repro.models.config import ModelConfig
+
+
+class Shape(NamedTuple):
+    name: str
+    kind: str          # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) — the skip set recorded in DESIGN.md."""
+    s = SHAPES[shape_name]
+    if cfg.is_encoder and s.kind == "decode":
+        return False, "encoder-only arch has no decode step"
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, ("long_500k requires sub-quadratic attention; "
+                       f"{cfg.name} is pure full-attention")
+    return True, ""
+
+
+def cells(cfg: ModelConfig):
+    return [(n, SHAPES[n]) for n in SHAPES if applicable(cfg, n)[0]]

@@ -1,0 +1,13 @@
+"""zamba2-2.7b [hybrid]: Mamba2 backbone + ONE shared attention(+MLP) block
+applied every 6 layers (parameters reused — zamba2's signature).
+[arXiv:2411.15242; hf]  54L d_model=2560 32H (kv=32) d_ff=10240 ssm_state=64.
+Sub-quadratic (SSM): runs the long_500k cell."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32, head_dim=80,
+    d_ff=10240, vocab=32000, mlp="swiglu",
+    attn_every=6,                       # 9 groups x 6 mamba layers
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_conv=4, ssm_chunk=256,
+)

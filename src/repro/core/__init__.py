@@ -1,0 +1,21 @@
+"""repro.core — the paper's contribution: mini-batch kernel k-means.
+
+Public API:
+    MBConfig, fit, fit_jit, predict          — Algorithm 2 (truncated)
+    untruncated.fit                          — Algorithm 1 (DP)
+    fullbatch.fit                            — full-batch baseline
+    kernel_fns.{Gaussian,Laplacian,...}      — kernel functions
+    init.kmeans_plus_plus                    — kernel k-means++
+    metrics.{adjusted_rand_index, normalized_mutual_info}
+"""
+from repro.core.kernel_fns import (  # noqa: F401
+    Gaussian, Laplacian, Linear, Polynomial, Precomputed,
+    gamma_of, kernel_cross, kernel_diag, median_sq_dist_heuristic,
+)
+from repro.core.minibatch import (  # noqa: F401
+    MBConfig, StepInfo, fit, fit_jit, make_step, predict, sample_batch,
+)
+from repro.core.state import CenterState, init_state, window_size  # noqa: F401
+from repro.core.metrics import (  # noqa: F401
+    adjusted_rand_index, normalized_mutual_info,
+)

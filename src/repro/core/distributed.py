@@ -1,0 +1,258 @@
+"""Multi-chip mini-batch kernel k-means (shard_map).
+
+Sharding layout (see DESIGN.md §4):
+
+* **Centers are sharded over the 'model' axis** — each device owns k/m whole
+  centers, so the window ring, eviction bookkeeping, <C,C> maintenance and
+  the learning-rate state are all device-LOCAL.  (Index-free: the window
+  stores point *coordinates*, so no cross-shard dataset gathers ever occur —
+  this also lets activations stream in from a co-resident LM, see
+  ``cluster_hidden_states``.)
+* **The batch is sharded over ('pod', 'data')** — assignment distances are
+  computed on local batch rows against local centers.
+
+Collectives per iteration (the roofline collective term):
+  1. all_gather over 'model'  of P_partial (b_loc, k_loc)  -> (b_loc, k)
+  2. all_gather over ('pod','data') of the batch (b, d) + assignments (b,)
+     [needed so center owners can append their assigned points]
+  3. psum of (k,)/scalar reductions.
+
+The step is paper-faithful (Algorithm 2 semantics identical to
+repro.core.minibatch); tests assert bit-comparable trajectories against the
+single-device implementation on a CPU mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.kernel_fns import KernelFn, kernel_cross, kernel_diag
+from repro.core.minibatch import MBConfig
+from repro.core.rates import get_rate
+
+
+class DistState(NamedTuple):
+    """All leading-k arrays are sharded over 'model'."""
+
+    pts: jax.Array      # (k, W, d) window point coordinates
+    coef: jax.Array     # (k, W)
+    head: jax.Array     # (k,)
+    sqnorm: jax.Array   # (k,)
+    counts: jax.Array   # (k,)
+    step: jax.Array     # ()  replicated
+
+
+class DistInfo(NamedTuple):
+    f_before: jax.Array
+    f_after: jax.Array
+    improvement: jax.Array
+    batch_counts: jax.Array  # (k,) sharded like centers
+
+
+def init_dist_state(center_pts: jax.Array, kernel: KernelFn,
+                    window: int) -> DistState:
+    """center_pts: (k, d) initial centers (e.g. k-means++ points)."""
+    k, d = center_pts.shape
+    pts = jnp.zeros((k, window, d), center_pts.dtype).at[:, 0, :].set(center_pts)
+    coef = jnp.zeros((k, window), jnp.float32).at[:, 0].set(1.0)
+    return DistState(
+        pts=pts, coef=coef,
+        head=jnp.ones((k,), jnp.int32),
+        sqnorm=kernel_diag(kernel, center_pts).astype(jnp.float32),
+        counts=jnp.zeros((k,), jnp.float32),
+        step=jnp.zeros((), jnp.int32))
+
+
+def state_shardings(mesh: Mesh, model_axis: str = "model"):
+    m = model_axis
+    return DistState(
+        pts=NamedSharding(mesh, P(m, None, None)),
+        coef=NamedSharding(mesh, P(m, None)),
+        head=NamedSharding(mesh, P(m)),
+        sqnorm=NamedSharding(mesh, P(m)),
+        counts=NamedSharding(mesh, P(m)),
+        step=NamedSharding(mesh, P()))
+
+
+def make_dist_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
+                   data_axes: Sequence[str] = ("data",),
+                   model_axis: str = "model"):
+    """Returns step(state, xb) -> (state, info), a shard_map'd Algorithm-2
+    iteration.  xb: (b, d) batch sharded over data_axes on rows."""
+    rate_fn = get_rate(cfg.rate)
+    b = cfg.batch_size
+    data_axes = tuple(data_axes)
+
+    cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else None
+
+    def _c(x):
+        """kernel-eval compute dtype cast (bf16 = MXU native; coefficients
+        and accumulations stay f32)."""
+        return x.astype(cdt) if cdt is not None else x
+
+    def local_step(state: DistState, xb_loc: jax.Array):
+        k_loc, w, d = state.pts.shape
+        m_idx = jax.lax.axis_index(model_axis)
+        k_total = k_loc * jax.lax.axis_size(model_axis)
+        center_gid0 = m_idx * k_loc  # first global center id on this device
+
+        # ---- assignment: local batch rows x local centers ------------------
+        diag_b = kernel_diag(kernel, xb_loc).astype(jnp.float32)   # (b_loc,)
+        cross = kernel_cross(kernel, _c(xb_loc),
+                             _c(state.pts.reshape(k_loc * w, d)))
+        p_loc = jnp.einsum("bkw,kw->bk",
+                           cross.reshape(xb_loc.shape[0], k_loc, w)
+                           .astype(jnp.float32),
+                           state.coef)                             # (b_loc,k_loc)
+        d_loc = diag_b[:, None] - 2.0 * p_loc + state.sqnorm[None, :]
+        d_all = jax.lax.all_gather(d_loc, model_axis, axis=1, tiled=True)
+        f_before = jnp.mean(jnp.min(d_all, axis=1))
+        for ax in data_axes:
+            f_before = jax.lax.pmean(f_before, ax)
+        assign_loc = jnp.argmin(d_all, axis=1).astype(jnp.int32)   # global ids
+
+        # ---- gather the full batch so center owners can ingest it ---------
+        xb_full, assign = xb_loc, assign_loc
+        for ax in reversed(data_axes):
+            xb_full = jax.lax.all_gather(xb_full, ax, axis=0, tiled=True)
+            assign = jax.lax.all_gather(assign, ax, axis=0, tiled=True)
+
+        onehot_loc = jax.nn.one_hot(assign - center_gid0, k_loc,
+                                    dtype=jnp.float32)             # (b, k_loc)
+        bj = jnp.sum(onehot_loc, axis=0)                           # (k_loc,)
+        alpha = rate_fn(bj, state.counts, b)
+        decay = 1.0 - alpha
+
+        # ---- local ring append --------------------------------------------
+        coef_scaled = state.coef * decay[:, None]
+
+        def one_center(pts_row, coef_row, head_j, alpha_j, bj_j, mask_j):
+            pos = jnp.cumsum(mask_j.astype(jnp.int32)) - 1
+            slot = jnp.where(mask_j, (head_j + pos) % w, w)
+            coef_row = coef_row.at[slot].set(
+                alpha_j / jnp.maximum(bj_j, 1.0), mode="drop")
+            pts_row = pts_row.at[slot].set(xb_full, mode="drop")
+            return pts_row, coef_row, (head_j + bj_j.astype(jnp.int32)) % w
+
+        mask = onehot_loc.T.astype(bool)                           # (k_loc, b)
+        new_pts, new_coef, new_head = jax.vmap(one_center)(
+            state.pts, coef_scaled, state.head, alpha, bj, mask)
+
+        # ---- <C,C> recompute ----------------------------------------------
+        if cfg.sqnorm_mode == "recompute_sharded":
+            # Beyond-paper (§Perf cell A): the baseline recomputes every
+            # center's full W x W Gram on EVERY data-row replica — R-fold
+            # redundant.  Here each data row computes W/R Gram rows and the
+            # quadratic form is psum'd: per-device flops drop by R.
+            r_total = 1
+            ridx = jnp.zeros((), jnp.int32)
+            for ax in data_axes:
+                ridx = ridx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+                r_total *= jax.lax.axis_size(ax)
+            rows = w // r_total
+
+            def sq_one(pts_row, coef_row):
+                sl = jax.lax.dynamic_slice_in_dim(pts_row, ridx * rows,
+                                                  rows, 0)
+                csl = jax.lax.dynamic_slice_in_dim(coef_row, ridx * rows,
+                                                   rows, 0)
+                g = kernel_cross(kernel, _c(sl), _c(pts_row))  # (W/R, W)
+                return csl @ (g.astype(jnp.float32) @ coef_row)
+
+            part = jax.vmap(sq_one)(new_pts, new_coef)
+            new_sqnorm = part
+            for ax in data_axes:
+                new_sqnorm = jax.lax.psum(new_sqnorm, ax)
+        else:
+            # paper-faithful local Gram per center
+            def sq_one(pts_row, coef_row):
+                g = kernel_cross(kernel, _c(pts_row), _c(pts_row))
+                return coef_row @ (g.astype(jnp.float32) @ coef_row)
+
+            new_sqnorm = jax.vmap(sq_one)(new_pts, new_coef)
+
+        # ---- batch objective on new centers (early stopping) ---------------
+        cross2 = kernel_cross(kernel, _c(xb_loc),
+                              _c(new_pts.reshape(k_loc * w, d)))
+        p2 = jnp.einsum("bkw,kw->bk",
+                        cross2.reshape(xb_loc.shape[0], k_loc, w)
+                        .astype(jnp.float32), new_coef)
+        d2 = diag_b[:, None] - 2.0 * p2 + new_sqnorm[None, :]
+        d2_min = jax.lax.pmin(jnp.min(d2, axis=1), model_axis)     # (b_loc,)
+        f_after = jnp.mean(d2_min)
+        for ax in data_axes:
+            f_after = jax.lax.pmean(f_after, ax)
+
+        new_state = DistState(pts=new_pts, coef=new_coef, head=new_head,
+                              sqnorm=new_sqnorm, counts=state.counts + bj,
+                              step=state.step + 1)
+        del k_total
+        return new_state, DistInfo(f_before, f_after, f_before - f_after, bj)
+
+    dspec = P(tuple(data_axes))
+    state_specs = DistState(
+        pts=P(model_axis, None, None), coef=P(model_axis, None),
+        head=P(model_axis), sqnorm=P(model_axis), counts=P(model_axis),
+        step=P())
+    info_specs = DistInfo(P(), P(), P(), P(model_axis))
+
+    step = jax.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(state_specs, P(tuple(data_axes), None)),
+        out_specs=(state_specs, info_specs),
+        check_vma=False)
+    del dspec
+    return step
+
+
+def fit_distributed(xb_stream, center_pts: jax.Array, kernel: KernelFn,
+                    cfg: MBConfig, mesh: Mesh,
+                    data_axes: Sequence[str] = ("data",),
+                    model_axis: str = "model",
+                    early_stop: bool = True):
+    """Drive the sharded step from a host iterator of (b, d) batches —
+    this is `cluster_hidden_states` when the iterator yields LM activations."""
+    from repro.core.state import window_size
+
+    w = window_size(cfg.batch_size, cfg.tau)
+    state = init_dist_state(center_pts, kernel, w)
+    shardings = state_shardings(mesh, model_axis)
+    state = jax.device_put(state, shardings)
+    step = jax.jit(make_dist_step(kernel, cfg, mesh, data_axes, model_axis),
+                   donate_argnums=(0,))
+    xspec = NamedSharding(mesh, P(tuple(data_axes), None))
+
+    history = []
+    for i, xb in enumerate(xb_stream):
+        if i >= cfg.max_iters:
+            break
+        state, info = step(state, jax.device_put(xb, xspec))
+        imp = float(info.improvement)
+        history.append(dict(step=i, f_before=float(info.f_before),
+                            f_after=float(info.f_after), improvement=imp))
+        if early_stop and imp < cfg.epsilon:
+            break
+    return state, history
+
+
+def cluster_hidden_states(activations_iter, k: int, kernel: KernelFn,
+                          cfg: MBConfig, mesh: Mesh, init_batch=None,
+                          **kw):
+    """First-class integration with the LM substrate: cluster a stream of
+    hidden-state batches (e.g. router inputs on MoE archs, HuBERT features).
+    Initial centers = k-means++ on the first batch."""
+    from repro.core.init import kmeans_plus_plus
+
+    it = iter(activations_iter)
+    first = init_batch if init_batch is not None else next(it)
+    cidx = kmeans_plus_plus(jax.random.PRNGKey(cfg.k), jnp.asarray(first),
+                            k, kernel)
+    center_pts = jnp.asarray(first)[cidx]
+    if init_batch is None:
+        import itertools
+        it = itertools.chain([first], it)
+    return fit_distributed(it, center_pts, kernel, cfg, mesh, **kw)

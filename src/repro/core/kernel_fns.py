@@ -1,0 +1,110 @@
+"""Kernel functions K(x, y) = <phi(x), phi(y)> as jit-friendly pytrees.
+
+Every kernel is a NamedTuple (automatically a pytree) dispatched through
+``kernel_cross`` / ``kernel_diag``.  Data is always an ``(n, d)`` float array;
+for :class:`Precomputed` kernels (k-nn / heat graphs from the paper's
+Appendix C) the "data" is an ``(n, 1)`` array of row indices into the
+precomputed Gram matrix, which keeps every algorithm in :mod:`repro.core`
+agnostic to the kernel type.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+
+class Gaussian(NamedTuple):
+    """K(x, y) = exp(-||x - y||^2 / kappa).  Normalized: gamma = 1."""
+
+    kappa: jax.Array  # scalar
+
+
+class Laplacian(NamedTuple):
+    """K(x, y) = exp(-||x - y||_1 / kappa).  Normalized: gamma = 1."""
+
+    kappa: jax.Array  # scalar
+
+
+class Polynomial(NamedTuple):
+    """K(x, y) = (x . y / scale + bias)^degree  (degree static-ish, pass int)."""
+
+    bias: jax.Array
+    scale: jax.Array
+    degree: int  # static
+
+
+class Linear(NamedTuple):
+    """K(x, y) = x . y  (plain k-means in disguise when used everywhere)."""
+
+
+class Precomputed(NamedTuple):
+    """Explicit Gram matrix (e.g. k-nn kernel D^-1 A D^-1, heat kernel).
+
+    Data rows are (float) indices into ``gram``.
+    """
+
+    gram: jax.Array  # (n, n)
+
+
+KernelFn = Union[Gaussian, Laplacian, Polynomial, Linear, Precomputed]
+
+
+def _sq_dists(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Pairwise squared Euclidean distances, (m, d) x (n, d) -> (m, n).
+
+    Uses the |x|^2 + |y|^2 - 2 x.y expansion so the inner term is a single
+    MXU matmul.  Clamped at zero against round-off.
+    """
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    yy = jnp.sum(y * y, axis=-1)[None, :]
+    xy = x @ y.T
+    return jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+
+
+def kernel_cross(k: KernelFn, x: jax.Array, y: jax.Array) -> jax.Array:
+    """Full cross-kernel matrix K(x_i, y_j), shape (m, n)."""
+    if isinstance(k, Gaussian):
+        return jnp.exp(-_sq_dists(x, y) / k.kappa)
+    if isinstance(k, Laplacian):
+        l1 = jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+        return jnp.exp(-l1 / k.kappa)
+    if isinstance(k, Polynomial):
+        return (x @ y.T / k.scale + k.bias) ** k.degree
+    if isinstance(k, Linear):
+        return x @ y.T
+    if isinstance(k, Precomputed):
+        xi = x[:, 0].astype(jnp.int32)
+        yi = y[:, 0].astype(jnp.int32)
+        return k.gram[xi][:, yi]
+    raise TypeError(f"unknown kernel {type(k)}")
+
+
+def kernel_diag(k: KernelFn, x: jax.Array) -> jax.Array:
+    """K(x_i, x_i), shape (m,).  O(m) — never forms the cross matrix."""
+    if isinstance(k, (Gaussian, Laplacian)):
+        return jnp.ones(x.shape[0], x.dtype)
+    if isinstance(k, Polynomial):
+        return (jnp.sum(x * x, axis=-1) / k.scale + k.bias) ** k.degree
+    if isinstance(k, Linear):
+        return jnp.sum(x * x, axis=-1)
+    if isinstance(k, Precomputed):
+        xi = x[:, 0].astype(jnp.int32)
+        return k.gram[xi, xi]
+    raise TypeError(f"unknown kernel {type(k)}")
+
+
+def gamma_of(k: KernelFn, x: jax.Array) -> jax.Array:
+    """gamma = max_x ||phi(x)|| = sqrt(max_x K(x, x)) — Theorem 1's parameter."""
+    return jnp.sqrt(jnp.max(kernel_diag(k, x)))
+
+
+def median_sq_dist_heuristic(x: jax.Array, sample: int = 1024) -> jax.Array:
+    """kappa heuristic of Wang et al. (2019): median pairwise squared distance
+    over a subsample.  Used to set the Gaussian bandwidth."""
+    s = x[: min(sample, x.shape[0])]
+    d2 = _sq_dists(s, s)
+    # exclude the zero diagonal from the median
+    m = d2 + jnp.diag(jnp.full(s.shape[0], jnp.nan, d2.dtype))
+    return jnp.nanmedian(m)

@@ -1,0 +1,105 @@
+"""Non-kernel baselines the paper compares against (§6): plain Lloyd
+k-means and mini-batch k-means with both learning rates.  Centers are
+explicit (k, d) vectors here."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.minibatch import sample_batch
+from repro.core.rates import get_rate
+
+
+def _dists(x, centers):
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    cc = jnp.sum(centers * centers, axis=-1)[None, :]
+    return jnp.maximum(xx + cc - 2.0 * x @ centers.T, 0.0)
+
+
+def _pp_init(key, x, k):
+    """Standard (Euclidean) k-means++."""
+    n = x.shape[0]
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+
+    def body(t, carry):
+        mind, chosen, key = carry
+        key, sub = jax.random.split(key)
+        p = mind / jnp.maximum(jnp.sum(mind), 1e-30)
+        nxt = jax.random.choice(sub, n, p=p)
+        chosen = chosen.at[t].set(nxt)
+        d = jnp.sum((x - x[nxt]) ** 2, axis=-1)
+        return jnp.minimum(mind, d), chosen, key
+
+    chosen = jnp.zeros((k,), jnp.int32).at[0].set(first)
+    mind = jnp.sum((x - x[first]) ** 2, axis=-1)
+    _, chosen, _ = jax.lax.fori_loop(1, k, body, (mind, chosen, key))
+    return x[chosen]
+
+
+def kmeans_fit(x, k, key, max_iters=100, init="kmeans++"):
+    centers = (_pp_init(key, x, k) if init == "kmeans++"
+               else x[jax.random.choice(key, x.shape[0], (k,), replace=False)])
+
+    @jax.jit
+    def step(centers, assign_prev):
+        d = _dists(x, centers)
+        assign = jnp.argmin(d, axis=1).astype(jnp.int32)
+        onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)
+        counts = jnp.sum(onehot, axis=0)
+        sums = onehot.T @ x
+        new_centers = jnp.where(counts[:, None] > 0,
+                                sums / jnp.maximum(counts, 1.0)[:, None],
+                                centers)
+        obj = jnp.mean(jnp.min(d, axis=1))
+        return new_centers, assign, obj, jnp.sum(assign != assign_prev)
+
+    assign = -jnp.ones((x.shape[0],), jnp.int32)
+    history = []
+    for i in range(max_iters):
+        centers, assign, obj, moved = step(centers, assign)
+        history.append(dict(step=i, objective=float(obj), moved=int(moved)))
+        if int(moved) == 0:
+            break
+    return centers, assign, history
+
+
+def minibatch_kmeans_fit(x, k, key, batch_size=1024, rate="beta",
+                         max_iters=200, epsilon=0.0, init="kmeans++",
+                         early_stop=False):
+    """Sculley-style mini-batch k-means; rate in {'beta','sklearn'} — the
+    experiment the paper runs to fill Schwartzman (2023)'s empirical gap."""
+    rate_fn = get_rate(rate)
+    n = x.shape[0]
+    kinit, key = jax.random.split(key)
+    centers = (_pp_init(kinit, x, k) if init == "kmeans++"
+               else x[jax.random.choice(kinit, n, (k,), replace=False)])
+
+    @jax.jit
+    def step(centers, counts, bidx):
+        xb = x[bidx]
+        d = _dists(xb, centers)
+        f_before = jnp.mean(jnp.min(d, axis=1))
+        assign = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)
+        bj = jnp.sum(onehot, axis=0)
+        alpha = rate_fn(bj, counts, batch_size)
+        cm = (onehot.T @ xb) / jnp.maximum(bj, 1.0)[:, None]
+        new_centers = jnp.where(
+            bj[:, None] > 0,
+            (1.0 - alpha)[:, None] * centers + alpha[:, None] * cm,
+            centers)
+        f_after = jnp.mean(jnp.min(_dists(xb, new_centers), axis=1))
+        return new_centers, counts + bj, f_before - f_after
+
+    counts = jnp.zeros((k,), x.dtype)
+    history = []
+    for i in range(max_iters):
+        key, kb = jax.random.split(key)
+        bidx = sample_batch(kb, n, batch_size)
+        centers, counts, imp = step(centers, counts, bidx)
+        history.append(dict(step=i, improvement=float(imp)))
+        if early_stop and float(imp) < epsilon:
+            break
+    assign = jnp.argmin(_dists(x, centers), axis=1).astype(jnp.int32)
+    return centers, assign, history

@@ -1,0 +1,299 @@
+"""Algorithm 2 — truncated mini-batch kernel k-means (the paper's core).
+
+One iteration (Theorem 1(1): O(k (tau+b)^2) kernel evaluations):
+
+1. sample a batch B of b points uniformly with replacement (PRNG-keyed);
+2. assign each batch point to the nearest truncated center
+   (d(x, C_j) = K(x,x) - 2 <phi(x), C_j> + <C_j, C_j>, where
+   <phi(x), C_j> = sum_w coef[j,w] K(x, X[idx[j,w]]));
+3. per-center learning rate alpha_j (beta or sklearn, rates.py);
+4. decay existing coefficients by (1 - alpha_j) and append the assigned
+   batch points with coefficient alpha_j / b_j into the ring window;
+5. refresh <C_j, C_j> (paper-faithful O(k W^2) recompute, or the
+   beyond-paper O(k W b) incremental mode);
+6. early stopping when the batch objective improves by less than epsilon.
+
+Everything is fixed-shape and jit-compatible; ``make_step`` closes over the
+static config and returns a pure step function.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import init as init_lib
+from repro.core.kernel_fns import KernelFn, kernel_cross, kernel_diag
+from repro.core.rates import get_rate
+from repro.core.state import CenterState, init_state, window_size
+
+
+class MBConfig(NamedTuple):
+    """Static configuration for Algorithm 2 (hashable -> jit static arg)."""
+
+    k: int
+    batch_size: int
+    tau: int
+    rate: str = "beta"              # 'beta' (paper theory) | 'sklearn'
+    sqnorm_mode: str = "recompute"  # 'recompute' (paper) | 'incremental'
+    eval_mode: str = "direct"       # 'direct' (paper) | 'delta' (beyond-paper)
+    epsilon: float = 1e-4
+    max_iters: int = 200
+    use_pallas: bool = False        # fused_assign Pallas kernel for step 2
+    compute_dtype: str = "float32"  # 'bfloat16': MXU-native kernel evals
+
+
+class StepInfo(NamedTuple):
+    f_before: jax.Array     # f_B(C_i)      — batch objective at entry
+    f_after: jax.Array      # f_B(C_{i+1})  — batch objective after update
+    improvement: jax.Array  # f_before - f_after (early stop: < epsilon)
+    batch_counts: jax.Array  # (k,) b_i^j
+    assignments: jax.Array   # (b,) int32
+
+
+def _batch_center_dots(kernel: KernelFn, xb: jax.Array, x: jax.Array,
+                       idx: jax.Array, coef: jax.Array,
+                       use_pallas: bool) -> jax.Array:
+    """P[x, j] = <phi(x), C_j> for batch xb against windowed centers."""
+    k, w = idx.shape
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.fused_batch_center_dots(kernel, xb, x[idx.reshape(-1)],
+                                            coef)
+    sup = x[idx.reshape(-1)]                      # (k*W, d)
+    cross = kernel_cross(kernel, xb, sup)         # (b, k*W)
+    return jnp.einsum("bkw,kw->bk", cross.reshape(xb.shape[0], k, w), coef)
+
+
+def _append_to_windows(idx, coef, head, alpha, bj, onehot, batch_idx):
+    """Masked ring-buffer append.  Returns new (idx, coef, head) plus the
+    (post-decay) index/coefficient of every evicted slot — the incremental
+    sqnorm path needs them.  b_j <= b <= W, so within one iteration the
+    write positions never collide."""
+    k, w = idx.shape
+    b = batch_idx.shape[0]
+
+    def one_center(idx_row, coef_row, head_j, alpha_j, bj_j, mask_j):
+        # position among this center's assigned points, for each batch slot
+        pos = jnp.cumsum(mask_j.astype(jnp.int32)) - 1            # (b,)
+        slot = (head_j + pos) % w
+        slot = jnp.where(mask_j, slot, w)                          # w => drop
+        evict_coef = coef_row.at[slot].get(mode="fill", fill_value=0.0)
+        evict_idx = idx_row.at[slot].get(mode="fill", fill_value=0)
+        newc = alpha_j / jnp.maximum(bj_j, 1.0)
+        coef_row = coef_row.at[slot].set(newc, mode="drop")
+        idx_row = idx_row.at[slot].set(batch_idx, mode="drop")
+        head_new = (head_j + bj_j.astype(jnp.int32)) % w
+        return idx_row, coef_row, head_new, evict_idx, evict_coef
+
+    mask = onehot.T.astype(bool)                                   # (k, b)
+    return jax.vmap(one_center)(idx, coef, head, alpha, bj, mask)
+
+
+def _sqnorm_recompute(kernel, x, idx, coef):
+    """Paper-faithful <C_j, C_j>: per-center W x W Gram quadratic form.
+    Empty slots (coef 0) contribute nothing."""
+
+    def one(idx_row, coef_row):
+        pts = x[idx_row]                                           # (W, d)
+        g = kernel_cross(kernel, pts, pts)                         # (W, W)
+        return coef_row @ (g @ coef_row)
+
+    return jax.vmap(one)(idx, coef)
+
+
+def make_step(kernel: KernelFn, cfg: MBConfig):
+    """Returns step(state, x, batch_idx) -> (state, StepInfo): one Algorithm-2
+    iteration.  Pure; jit/shard_map-able; x passed explicitly (never a baked
+    constant)."""
+    rate_fn = get_rate(cfg.rate)
+    b = cfg.batch_size
+
+    def step(state: CenterState, x: jax.Array, batch_idx: jax.Array):
+        k, w = state.idx.shape
+        xb = x[batch_idx]                                          # (b, d)
+        diag_b = kernel_diag(kernel, xb)                           # (b,)
+
+        # ---- (2) assignment against current truncated centers -------------
+        p = _batch_center_dots(kernel, xb, x, state.idx, state.coef,
+                               cfg.use_pallas)                     # (b, k)
+        dists = diag_b[:, None] - 2.0 * p + state.sqnorm[None, :]
+        f_before = jnp.mean(jnp.min(dists, axis=1))
+        assign = jnp.argmin(dists, axis=1).astype(jnp.int32)
+        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)      # (b, k)
+        bj = jnp.sum(onehot, axis=0)                               # (k,)
+
+        # ---- (3) learning rate --------------------------------------------
+        alpha = rate_fn(bj, state.counts, b)                       # (k,)
+        decay = 1.0 - alpha
+
+        # ---- (4) decay + ring append --------------------------------------
+        coef_scaled = state.coef * decay[:, None]
+        new_idx, new_coef, new_head, evict_idx, evict_coef = _append_to_windows(
+            state.idx, coef_scaled, state.head, alpha, bj, onehot, batch_idx)
+
+        # ---- (5) center squared norms --------------------------------------
+        onehot_n = onehot / jnp.maximum(bj, 1.0)[None, :]          # (b, k)
+        if cfg.sqnorm_mode == "recompute":
+            new_sqnorm = _sqnorm_recompute(kernel, x, new_idx, new_coef)
+            kbb = None
+        elif cfg.sqnorm_mode == "incremental":
+            # <C', C'> for the *untruncated* update, then subtract the
+            # evicted component D:  <C-D, C-D> = <C,C> - 2<C-D, D> - <D,D>.
+            kbb = kernel_cross(kernel, xb, xb)                     # (b, b)
+            cm_cross = jnp.sum(onehot * p, axis=0) / jnp.maximum(bj, 1.0)
+            cm_sq = jnp.sum(onehot_n * (kbb @ onehot_n), axis=0)   # (k,)
+            sq_untrunc = (decay ** 2 * state.sqnorm
+                          + 2.0 * decay * alpha * cm_cross
+                          + alpha ** 2 * cm_sq)
+
+            def corr(evict_i, evict_c, idx_row, coef_row):
+                kd_w = kernel_cross(kernel, x[evict_i], x[idx_row])  # (b, W)
+                c_d_new = evict_c @ (kd_w @ coef_row)     # <D, C_trunc>
+                kdd = kernel_cross(kernel, x[evict_i], x[evict_i])
+                dd = evict_c @ (kdd @ evict_c)            # <D, D>
+                return 2.0 * c_d_new + dd
+
+            new_sqnorm = sq_untrunc - jax.vmap(corr)(
+                evict_idx, evict_coef, new_idx, new_coef)
+        else:
+            raise ValueError(cfg.sqnorm_mode)
+
+        # ---- (6) batch objective on the NEW centers (early stopping) ------
+        if cfg.eval_mode == "direct":
+            p_new = _batch_center_dots(kernel, xb, x, new_idx, new_coef,
+                                       cfg.use_pallas)
+        elif cfg.eval_mode == "delta":
+            # <phi(x), C'_j> = decay_j P[x,j] + alpha_j <phi(x), cm(B_j)>
+            #                  - <phi(x), D_j>           — O(k b^2), no kW pass
+            if kbb is None:
+                kbb = kernel_cross(kernel, xb, xb)
+            cm_dot = kbb @ onehot_n                                # (b, k)
+
+            def drop_dot(evict_i, evict_c):
+                return kernel_cross(kernel, xb, x[evict_i]) @ evict_c  # (b,)
+
+            d_dot = jax.vmap(drop_dot)(evict_idx, evict_coef).T    # (b, k)
+            p_new = decay[None, :] * p + alpha[None, :] * cm_dot - d_dot
+        else:
+            raise ValueError(cfg.eval_mode)
+
+        d_new = diag_b[:, None] - 2.0 * p_new + new_sqnorm[None, :]
+        f_after = jnp.mean(jnp.min(d_new, axis=1))
+
+        new_state = CenterState(
+            idx=new_idx, coef=new_coef, head=new_head, sqnorm=new_sqnorm,
+            counts=state.counts + bj, step=state.step + 1)
+        info = StepInfo(f_before=f_before, f_after=f_after,
+                        improvement=f_before - f_after,
+                        batch_counts=bj, assignments=assign)
+        return new_state, info
+
+    return step
+
+
+def sample_batch(key: jax.Array, n: int, b: int) -> jax.Array:
+    """Uniform with replacement (paper's sampling model)."""
+    return jax.random.randint(key, (b,), 0, n, dtype=jnp.int32)
+
+
+def sample_batch_weighted(key: jax.Array, probs: jax.Array,
+                          b: int) -> jax.Array:
+    """Weighted case (paper footnote 1): sampling x with probability
+    proportional to w_x makes the plain batch mean an unbiased estimator of
+    the weighted objective and the plain cm(B_j) the weighted center update
+    — Algorithm 2 itself is unchanged."""
+    return jax.random.choice(key, probs.shape[0], (b,), p=probs) \
+        .astype(jnp.int32)
+
+
+def fit(x: jax.Array, kernel: KernelFn, cfg: MBConfig, key: jax.Array,
+        init: str = "kmeans++", early_stop: bool = True,
+        init_idx: Optional[jax.Array] = None,
+        weights: Optional[jax.Array] = None):
+    """Host-driven fit loop with the paper's early-stopping condition.
+
+    ``weights``: optional (n,) positive point weights (footnote 1) —
+    implemented as weighted batch sampling, see sample_batch_weighted.
+    Returns (state, history) where history is a list of per-step StepInfo
+    (as numpy scalars) — benchmarks consume it directly.
+    """
+    n = x.shape[0]
+    probs = None
+    if weights is not None:
+        probs = jnp.asarray(weights, jnp.float32)
+        probs = probs / jnp.sum(probs)
+    if init_idx is None:
+        kinit, key = jax.random.split(key)
+        if init == "kmeans++":
+            init_idx = init_lib.kmeans_plus_plus(kinit, x, cfg.k, kernel)
+        elif init == "random":
+            init_idx = init_lib.random_init(kinit, n, cfg.k)
+        else:
+            raise ValueError(init)
+    w = window_size(cfg.batch_size, cfg.tau)
+    state = init_state(x, init_idx, kernel, w)
+
+    step = jax.jit(make_step(kernel, cfg), donate_argnums=(0,))
+
+    history = []
+    for i in range(cfg.max_iters):
+        key, kb = jax.random.split(key)
+        bidx = (sample_batch(kb, n, cfg.batch_size) if probs is None
+                else sample_batch_weighted(kb, probs, cfg.batch_size))
+        state, info = step(state, x, bidx)
+        imp = float(info.improvement)
+        history.append(dict(step=i, f_before=float(info.f_before),
+                            f_after=float(info.f_after), improvement=imp))
+        if early_stop and imp < cfg.epsilon:
+            break
+    return state, history
+
+
+def fit_jit(x: jax.Array, kernel: KernelFn, cfg: MBConfig, key: jax.Array,
+            init_idx: jax.Array):
+    """Fully-on-device fit: lax.while_loop with the stopping condition in the
+    loop — no per-step host sync (the production/TPU path)."""
+    n = x.shape[0]
+    w = window_size(cfg.batch_size, cfg.tau)
+    state0 = init_state(x, init_idx, kernel, w)
+    step = make_step(kernel, cfg)
+
+    def cond(carry):
+        _, _, i, imp = carry
+        return (i < cfg.max_iters) & (imp >= cfg.epsilon)
+
+    def body(carry):
+        state, key, i, _ = carry
+        key, kb = jax.random.split(key)
+        bidx = sample_batch(kb, n, cfg.batch_size)
+        state, info = step(state, x, bidx)
+        return state, key, i + 1, info.improvement
+
+    init_carry = (state0, key, jnp.zeros((), jnp.int32),
+                  jnp.full((), jnp.inf, jnp.float32))
+    state, _, iters, _ = jax.lax.while_loop(cond, body, init_carry)
+    return state, iters
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def predict(state: CenterState, x: jax.Array, xq: jax.Array,
+            kernel: KernelFn, chunk: int = 4096) -> jax.Array:
+    """Assign arbitrary points to the fitted (truncated) centers."""
+    k, w = state.idx.shape
+    sup = x[state.idx.reshape(-1)]
+
+    def one_chunk(xc):
+        cross = kernel_cross(kernel, xc, sup).reshape(xc.shape[0], k, w)
+        p = jnp.einsum("bkw,kw->bk", cross, state.coef)
+        d = (kernel_diag(kernel, xc)[:, None] - 2.0 * p
+             + state.sqnorm[None, :])
+        return jnp.argmin(d, axis=1).astype(jnp.int32)
+
+    nq = xq.shape[0]
+    pad = (-nq) % chunk
+    xp = jnp.pad(xq, ((0, pad),) + ((0, 0),) * (xq.ndim - 1))
+    out = jax.lax.map(one_chunk, xp.reshape(-1, chunk, *xq.shape[1:]))
+    return out.reshape(-1)[:nq]

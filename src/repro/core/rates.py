@@ -1,0 +1,40 @@
+"""Learning-rate schedules for mini-batch (kernel) k-means.
+
+``beta``  — Schwartzman (2023): alpha_i^j = sqrt(b_i^j / b).  Does NOT decay
+            to zero; the paper's theory (Theorem 1) requires this rate, and
+            §6 shows it also gives better quality in practice.
+``sklearn`` — classic Sculley (2010)/sklearn rate: centers are running means,
+            alpha_i^j = b_i^j / (c_j + b_i^j) where c_j counts every point
+            ever assigned to j.  Decays to zero over time.
+
+Both are pure functions of (batch counts, historical counts, batch size) so
+they live inside jit'd steps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def beta_rate(batch_counts: jax.Array, total_counts: jax.Array,
+              batch_size: int) -> jax.Array:
+    del total_counts
+    return jnp.sqrt(batch_counts.astype(jnp.float32) / batch_size)
+
+
+def sklearn_rate(batch_counts: jax.Array, total_counts: jax.Array,
+                 batch_size: int) -> jax.Array:
+    del batch_size
+    bc = batch_counts.astype(jnp.float32)
+    denom = jnp.maximum(total_counts.astype(jnp.float32) + bc, 1.0)
+    return bc / denom
+
+
+RATES = {"beta": beta_rate, "sklearn": sklearn_rate}
+
+
+def get_rate(name: str):
+    try:
+        return RATES[name]
+    except KeyError:
+        raise ValueError(f"unknown learning rate {name!r}; options {list(RATES)}")

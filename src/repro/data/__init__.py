@@ -1,0 +1,7 @@
+from repro.data.synthetic import (  # noqa: F401
+    anisotropic,
+    blobs,
+    circles,
+    moons,
+    make_dataset,
+)

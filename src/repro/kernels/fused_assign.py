@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: fused kernel-distance x coefficient contraction.
+
+Computes   P[i, j] = sum_w coef[j, w] * K(xb[i], sup[j, w])
+— the hot loop of Algorithm 2's assignment step (Theorem 1(1)'s O(k b (tau+b))
+term) — WITHOUT materializing the (b, k*W) cross-kernel matrix in HBM.
+
+TPU mapping (see DESIGN.md §5):
+* grid = (k, b/bt, W/st); the innermost axis streams support tiles.
+* Each step: one (bt, d) x (d, st) MXU matmul for the cross products, VPU
+  exp for the Gaussian, then a (bt, st) x (st,) contraction with the
+  coefficient slice accumulated into the resident (bt, 1) output block.
+* VMEM working set per step: bt*d + st*d + bt*st + bt floats
+  (= 128*512*4 * 2 + 128*128*4 + small ≈ 0.6 MB at the default tiles —
+  comfortably inside the ~16 MB VMEM budget, leaving room for
+  double-buffered prefetch of the next support tile).
+* Supported kernels: gaussian / linear / polynomial (MXU-friendly);
+  laplacian needs an L1 distance (no matmul form) and falls back to the
+  XLA path in ops.py.
+
+Block sizes are parameters; tests sweep small tiles in interpret mode, the
+TPU default is (128, 128) with d padded to a multiple of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _apply_kernel(xy, xsq, ysq, kind: str, p0: float, p1: float, p2: int):
+    """Elementwise kernel from cross products + squared norms (f32)."""
+    if kind == "gaussian":
+        d2 = jnp.maximum(xsq[:, None] + ysq[None, :] - 2.0 * xy, 0.0)
+        return jnp.exp(-d2 / p0)
+    if kind == "linear":
+        return xy
+    if kind == "polynomial":
+        return (xy / p1 + p0) ** p2
+    raise ValueError(kind)
+
+
+def _fused_body(x_ref, xsq_ref, sup_ref, supsq_ref, coef_ref, out_ref,
+                *, kind, p0, p1, p2):
+    iw = pl.program_id(2)
+
+    @pl.when(iw == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (bt, d)
+    s = sup_ref[0].astype(jnp.float32)          # (st, d)
+    xy = jax.lax.dot_general(x, s, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (bt, st)
+    kv = _apply_kernel(xy, xsq_ref[...].astype(jnp.float32),
+                       supsq_ref[0].astype(jnp.float32), kind, p0, p1, p2)
+    c = coef_ref[0].astype(jnp.float32)         # (st,)
+    out_ref[:, 0] += kv @ c
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "p0", "p1", "p2", "bt", "st", "interpret"))
+def fused_batch_center_dots_pallas(
+        xb: jax.Array, sup: jax.Array, coef: jax.Array, *,
+        kind: str = "gaussian", p0: float = 1.0, p1: float = 1.0,
+        p2: int = 2, bt: int = 128, st: int = 128,
+        interpret: bool = False) -> jax.Array:
+    """xb: (b, d); sup: (k, W, d); coef: (k, W) -> P (b, k) f32.
+
+    b, W, d are padded to tile multiples here (zero points with zero
+    coefficients contribute nothing for every supported kernel)."""
+    b, d = xb.shape
+    k, w, _ = sup.shape
+
+    bp = -b % bt
+    wp = -w % st
+    dp = -d % 128
+    xb_p = jnp.pad(xb, ((0, bp), (0, dp)))
+    sup_p = jnp.pad(sup, ((0, 0), (0, wp), (0, dp)))
+    coef_p = jnp.pad(coef, ((0, 0), (0, wp)))
+    xsq = jnp.sum(xb_p.astype(jnp.float32) ** 2, axis=-1)        # (b+,)
+    supsq = jnp.sum(sup_p.astype(jnp.float32) ** 2, axis=-1)     # (k, W+)
+
+    bb, dd = xb_p.shape
+    ww = sup_p.shape[1]
+    grid = (k, bb // bt, ww // st)
+
+    out = pl.pallas_call(
+        functools.partial(_fused_body, kind=kind, p0=p0, p1=p1, p2=p2),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, dd), lambda j, ib, iw: (ib, 0)),
+            pl.BlockSpec((bt,), lambda j, ib, iw: (ib,)),
+            pl.BlockSpec((1, st, dd), lambda j, ib, iw: (j, iw, 0)),
+            pl.BlockSpec((1, st), lambda j, ib, iw: (j, iw)),
+            pl.BlockSpec((1, st), lambda j, ib, iw: (j, iw)),
+        ],
+        out_specs=pl.BlockSpec((bt, 1), lambda j, ib, iw: (ib, j)),
+        out_shape=jax.ShapeDtypeStruct((bb, k), jnp.float32),
+        interpret=interpret,
+    )(xb_p, xsq, sup_p, supsq, coef_p)
+    return out[:b]

@@ -1,0 +1,67 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Dispatch: on TPU the kernels compile natively; on CPU (this container) they
+run in interpret mode, which executes the kernel body in Python — identical
+numerics, so tests validate the real tiling logic.  Kernels without an
+MXU-friendly form (Laplacian L1, Precomputed gathers) fall back to the XLA
+reference path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernel_fns import (
+    Gaussian, KernelFn, Linear, Polynomial,
+)
+from repro.kernels import ref
+from repro.kernels.fused_assign import fused_batch_center_dots_pallas
+from repro.kernels.kernel_matmul import kernel_matmul_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _dispatch(kernel: KernelFn):
+    """-> (kind, p0, p1, p2) or None when no Pallas form exists."""
+    if isinstance(kernel, Gaussian):
+        return "gaussian", float(kernel.kappa), 1.0, 2
+    if isinstance(kernel, Linear):
+        return "linear", 0.0, 1.0, 2
+    if isinstance(kernel, Polynomial):
+        return "polynomial", float(kernel.bias), float(kernel.scale), \
+            int(kernel.degree)
+    return None
+
+
+def fused_batch_center_dots(kernel: KernelFn, xb: jax.Array,
+                            sup_flat: jax.Array, coef: jax.Array,
+                            bt: int = 128, st: int = 128,
+                            interpret=None) -> jax.Array:
+    """P[i,j] = sum_w coef[j,w] K(xb[i], sup[j,w]);  sup_flat: (k*W, d)."""
+    k, w = coef.shape
+    sup = sup_flat.reshape(k, w, sup_flat.shape[-1])
+    disp = _dispatch(kernel)
+    if disp is None:
+        return ref.batch_center_dots(kernel, xb, sup, coef)
+    kind, p0, p1, p2 = disp
+    if interpret is None:
+        interpret = _interpret_default()
+    return fused_batch_center_dots_pallas(
+        xb, sup, coef, kind=kind, p0=p0, p1=p1, p2=p2, bt=bt, st=st,
+        interpret=interpret)
+
+
+def kernel_matmul(kernel: KernelFn, x: jax.Array, y: jax.Array,
+                  v: jax.Array, nt: int = 128, mt: int = 128,
+                  interpret=None) -> jax.Array:
+    """(K(x, y) @ v) without materializing K."""
+    disp = _dispatch(kernel)
+    if disp is None:
+        return ref.kernel_matmul(kernel, x, y, v)
+    kind, p0, p1, p2 = disp
+    if interpret is None:
+        interpret = _interpret_default()
+    return kernel_matmul_pallas(x, y, v, kind=kind, p0=p0, p1=p1, p2=p2,
+                                nt=nt, mt=mt, interpret=interpret)

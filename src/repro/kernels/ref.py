@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels — the ground truth every kernel
+test asserts against (interpret-mode sweeps in tests/test_pallas_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernel_fns import KernelFn, kernel_cross
+
+
+def batch_center_dots(kernel: KernelFn, xb: jax.Array, sup: jax.Array,
+                      coef: jax.Array) -> jax.Array:
+    """P[i, j] = sum_w coef[j, w] * K(xb[i], sup[j, w]).
+
+    xb: (b, d); sup: (k, W, d); coef: (k, W) -> (b, k) float32.
+    """
+    b = xb.shape[0]
+    k, w, d = sup.shape
+    cross = kernel_cross(kernel, xb, sup.reshape(k * w, d))
+    return jnp.einsum("bkw,kw->bk", cross.reshape(b, k, w), coef)
+
+
+def kernel_matmul(kernel: KernelFn, x: jax.Array, y: jax.Array,
+                  v: jax.Array) -> jax.Array:
+    """(K(x, y) @ v): x (n, d), y (m, d), v (m, c) -> (n, c).
+
+    Materializes the full (n, m) kernel matrix — O(n m) memory — which is
+    exactly what the Pallas kernel avoids."""
+    return kernel_cross(kernel, x, y) @ v

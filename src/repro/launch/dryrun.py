@@ -1,0 +1,448 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (architecture x input-shape x
+mesh) cell on the production meshes and extract the roofline terms.
+
+MUST be run as its own process (python -m repro.launch.dryrun ...): the
+XLA_FLAGS line above executes before any jax import, giving this process 512
+placeholder CPU devices so jax.make_mesh can build the 16x16 and 2x16x16
+production meshes.  Nothing is allocated — inputs are ShapeDtypeStructs.
+
+Outputs one JSON per cell under experiments/dryrun/ with:
+  memory_analysis   (bytes per device — proves it fits)
+  cost_analysis     (HLO flops / bytes accessed, per device)
+  collective_bytes  (parsed from the compiled HLO: all-gather, all-reduce,
+                     reduce-scatter, all-to-all, collective-permute)
+  roofline terms    (compute / memory / collective seconds, §Roofline)
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_arch_names, get_config
+from repro.configs.shapes import SHAPES, applicable
+from repro.launch import sharding as shl
+from repro.launch import specs as spx
+from repro.launch.mesh import make_production_mesh
+from repro.models import decode_step, forward_train, prefill
+from repro.train import AdamWConfig, make_train_step
+
+# --- TPU v5e hardware constants (roofline denominators) -----------------
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+SHAPE_RE = re.compile(r"\b([a-z]+\d+)\[([\d,]*)\]")
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+               "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes_of(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the compiled HLO (the
+    spec's §Roofline recipe).  Falls back to the result shape when operand
+    shapes are not printed on the line."""
+    totals = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        op = m.group(1)
+        # shapes on the line: first = result, rest = operands
+        shapes = SHAPE_RE.findall(line)
+        if not shapes:
+            continue
+        operands = shapes[1:] if len(shapes) > 1 else shapes[:1]
+        nbytes = 0
+        for dt, dims in operands:
+            if dt not in DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES[dt]
+        totals[op] = totals.get(op, 0) + nbytes
+    totals["total"] = sum(v for k, v in totals.items() if k != "total")
+    return totals
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) for train;
+    2 N D for prefill; 2 N per token for decode (D = tokens processed)."""
+    from repro.models import init_params
+    struct = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+
+    def leaf_count(tree):
+        return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+    n_total = leaf_count(struct)
+    # active params: for MoE count top_k+shared of the expert stack
+    if cfg.moe:
+        flat, _ = jax.tree_util.tree_flatten_with_path(struct)
+        expert_params = sum(
+            int(leaf.size) for path, leaf in flat
+            if "mlp" in str(path) and leaf.ndim >= 3 and "layers" in
+            str(path) and any(s in str(path) for s in ("wg", "wu", "wd"))
+            and leaf.shape[-3] == cfg.n_experts)
+        n_active = (n_total - expert_params
+                    + expert_params * cfg.top_k / cfg.n_experts)
+    else:
+        n_active = n_total
+    toks = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                 else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * toks
+
+
+def build_lowerable(arch: str, shape_name: str, mesh, opts=(),
+                    cfg_mod=None):
+    """Returns (fn, kwargs_structs, in_shardings, out_shardings, donate).
+
+    opts (§Perf beyond-paper switches, default off = paper/naive baseline):
+      moe_group            per-data-shard MoE dispatch (+ mesh constraints)
+      rwkv_chunked         chunked-matmul WKV instead of sequential scan
+      rwkv_dp              replicate rwkv time-mix weights (pure DP; fixes
+                           40-heads-vs-16-axis resharding)
+      cluster_sharded_gram shard the <C,C> Gram rows over the data axes
+    """
+    import dataclasses
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if arch == "paper_cluster":
+        return build_cluster_lowerable(mesh, opts)
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if "moe_group" in opts:
+        cfg = dataclasses.replace(cfg, moe_group_dispatch=True)
+    if "rwkv_chunked" in opts:
+        cfg = dataclasses.replace(cfg, rwkv_chunked=True)
+    if "attn_bf16" in opts:
+        cfg = dataclasses.replace(cfg, attn_scores_bf16=True)
+    if cfg_mod:
+        cfg = dataclasses.replace(cfg, **cfg_mod)
+    hybrid = cfg.family == "hybrid"
+
+    rep = ("tm",) if "rwkv_dp" in opts else ()
+    if shape.kind == "train":
+        state_struct = spx.train_state_struct(cfg)
+        batch_struct = spx.train_batch_specs(cfg, shape)
+        st_specs = shl.train_state_specs(state_struct, mesh, hybrid,
+                                         replicate_patterns=rep)
+        b_specs = shl.batch_specs(batch_struct, mesh)
+        step = make_train_step(cfg, AdamWConfig())
+        in_sh = (shl.named(st_specs, mesh), shl.named(b_specs, mesh))
+        out_sh = (shl.named(st_specs, mesh),
+                  jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                               {"loss": 0, "grad_norm": 0, "lr": 0}))
+        return (step, (state_struct, batch_struct), in_sh, out_sh, (0,))
+
+    params_struct = spx.params_specs(cfg)
+    p_specs = shl.param_specs(params_struct, mesh, hybrid,
+                              replicate_patterns=rep)
+    p_sh = shl.named(p_specs, mesh)
+
+    if shape.kind == "prefill":
+        batch_struct = spx.prefill_batch_specs(cfg, shape)
+        b_sh = shl.named(shl.batch_specs(batch_struct, mesh), mesh)
+        if cfg.is_encoder:
+            def encode(params, batch):
+                return forward_train(params, cfg, batch)
+            return (encode, (params_struct, batch_struct), (p_sh, b_sh),
+                    None, ())
+
+        def prefill_step(params, batch):
+            return prefill(params, cfg, batch,
+                           cache_len=shape.seq_len + 128)
+        return (prefill_step, (params_struct, batch_struct), (p_sh, b_sh),
+                None, ())
+
+    # decode
+    cache_struct, tok_struct, pos_struct = spx.decode_specs(cfg, shape)
+    c_specs = shl.cache_specs(cache_struct, mesh, hybrid)
+    c_sh = shl.named(c_specs, mesh)
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    tok_sh = NamedSharding(mesh, P(dp if shape.global_batch %
+                                   _dp_size(mesh) == 0 else None, None))
+    pos_sh = NamedSharding(mesh, P(dp if shape.global_batch %
+                                   _dp_size(mesh) == 0 else None))
+
+    def serve_step(params, cache, tokens, pos):
+        return decode_step(params, cfg, cache, tokens, pos)
+
+    return (serve_step, (params_struct, cache_struct, tok_struct,
+                         pos_struct),
+            (p_sh, c_sh, tok_sh, pos_sh), None, (1,))
+
+
+def _dp_size(mesh):
+    import numpy as np
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                        if a != "model"]))
+
+
+def build_cluster_lowerable(mesh, opts=()):
+    """The paper's technique at production scale: one Algorithm-2 iteration
+    of the distributed mini-batch kernel k-means service."""
+    from repro.configs.paper_cluster import CONFIG as _MBCFG, EMBED_DIM, \
+        KAPPA
+    MBCFG = _MBCFG
+    if "cluster_sharded_gram" in opts:
+        MBCFG = MBCFG._replace(sqnorm_mode="recompute_sharded")
+    if "cluster_bf16" in opts:
+        MBCFG = MBCFG._replace(compute_dtype="bfloat16")
+    from repro.core.kernel_fns import Gaussian
+    from repro.core.distributed import (
+        DistState, make_dist_step, state_shardings)
+    from repro.core.state import window_size
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    kern = Gaussian(kappa=jnp.float32(KAPPA))
+    w = window_size(MBCFG.batch_size, MBCFG.tau)
+    k, d = MBCFG.k, EMBED_DIM
+    # bf16 mode stores the window and streams the batch natively in bf16 —
+    # casting f32 state on the fly was REFUTED in §Perf (adds a convert +
+    # double read); native storage halves both HBM and all-gather bytes.
+    pdt = jnp.bfloat16 if MBCFG.compute_dtype == "bfloat16" else jnp.float32
+    state_struct = DistState(
+        pts=jax.ShapeDtypeStruct((k, w, d), pdt),
+        coef=jax.ShapeDtypeStruct((k, w), jnp.float32),
+        head=jax.ShapeDtypeStruct((k,), jnp.int32),
+        sqnorm=jax.ShapeDtypeStruct((k,), jnp.float32),
+        counts=jax.ShapeDtypeStruct((k,), jnp.float32),
+        step=jax.ShapeDtypeStruct((), jnp.int32))
+    xb_struct = jax.ShapeDtypeStruct((MBCFG.batch_size, d), pdt)
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    step = make_dist_step(kern, MBCFG, mesh, data_axes=data_axes)
+    st_sh = state_shardings(mesh)
+    xb_sh = NamedSharding(mesh, P(data_axes, None))
+    info_sh = None
+    return (step, (state_struct, xb_struct), (st_sh, xb_sh), info_sh, (0,))
+
+
+def _measure_terms(arch, shape_name, mesh, opts, cfg_mod):
+    """Lower one variant and return raw per-device (flops, bytes, collective
+    bytes) from the compiled artifact."""
+    from repro.launch import context as ctx
+
+    fn, structs, in_sh, out_sh, _ = build_lowerable(
+        arch, shape_name, mesh, opts, cfg_mod)
+    kw = dict(in_shardings=in_sh)
+    if out_sh is not None:
+        kw["out_shardings"] = out_sh
+    with ctx.use_mesh(mesh):
+        compiled = jax.jit(fn, **kw).lower(*structs).compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_of(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), float(coll["total"]))
+
+
+def scan_corrected_terms(arch: str, shape_name: str, mesh, opts=()):
+    """XLA cost_analysis counts a while-loop body ONCE regardless of trip
+    count (verified: a 4-layer scanned stack reports 1-layer flops).  We
+    therefore lower two SMALL fully-unrolled variants, fit T(L) = a + b*L
+    (exact for homogeneous stacks), and extrapolate to the full depth.
+
+    rwkv (ssm) keeps an inner scan over TIME whose body is also counted
+    once per layer; for the sequential baseline we add the analytic WKV
+    recurrence cost (5 B H hd^2 flops + 2x state HBM traffic per step) —
+    the chunked variant hoists that work out of the scan so its measured
+    numbers need no adjustment (inter-chunk carry is negligible)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if cfg.family == "hybrid":
+        u1, u2 = cfg.attn_every, 2 * cfg.attn_every
+        units_full = cfg.n_layers
+    else:
+        u1, u2 = 1, 2
+        units_full = cfg.n_layers
+
+    t1 = _measure_terms(arch, shape_name, mesh, opts,
+                        {"n_layers": u1, "scan_unroll": True})
+    t2 = _measure_terms(arch, shape_name, mesh, opts,
+                        {"n_layers": u2, "scan_unroll": True})
+    per = [(b - a) / (u2 - u1) for a, b in zip(t1, t2)]
+    corrected = [a + p * (units_full - u1) for a, p in zip(t1, per)]
+
+    if (cfg.family == "ssm" and "rwkv_chunked" not in opts
+            and shape.kind != "decode"):
+        # analytic WKV sequential-scan interior (per device, per layer)
+        dp = _dp_size(mesh)
+        b_loc = max(shape.global_batch // dp, 1)
+        nh = cfg.n_heads
+        hd = cfg.ssm_head_dim
+        s = shape.seq_len
+        bwd = 3.0 if shape.kind == "train" else 1.0
+        corrected[0] += bwd * cfg.n_layers * s * 5.0 * b_loc * nh * hd * hd
+        corrected[1] += bwd * cfg.n_layers * s * 2.0 * b_loc * nh * hd * hd * 4
+    return {
+        "flops_per_device": corrected[0],
+        "bytes_per_device": corrected[1],
+        "collective_bytes": corrected[2],
+        "fit_points": {"units": [u1, u2], "flops": [t1[0], t2[0]],
+                       "bytes": [t1[1], t2[1]],
+                       "collective": [t1[2], t2[2]]},
+        "roofline": {
+            "compute_s": corrected[0] / PEAK_FLOPS,
+            "memory_s": corrected[1] / HBM_BW,
+            "collective_s": corrected[2] / ICI_BW,
+        },
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = "experiments/dryrun", opts=(),
+             correct_scan: bool = False) -> dict:
+    from repro.launch import context as ctx
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    fn, structs, in_sh, out_sh, donate = build_lowerable(arch, shape_name,
+                                                         mesh, opts)
+    jit_kw = dict(in_shardings=in_sh)
+    if out_sh is not None:
+        jit_kw["out_shardings"] = out_sh
+    with ctx.use_mesh(mesh):       # model-internal sharding constraints
+        lowered = jax.jit(fn, **jit_kw).lower(*structs)
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_of(hlo)
+
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_acc / HBM_BW,
+        "collective_s": coll["total"] / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "opts": sorted(opts),
+        "chips": n_chips,
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+            + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+        },
+        "cost": {"flops_per_device": flops,
+                 "bytes_per_device": bytes_acc},
+        "collectives": coll,
+        "roofline": {**terms, "dominant": dominant},
+    }
+    if correct_scan and arch != "paper_cluster":
+        corr = scan_corrected_terms(arch, shape_name, mesh, opts)
+        corr["roofline"]["dominant"] = max(
+            corr["roofline"], key=corr["roofline"].get)
+        result["corrected"] = corr
+
+    if arch == "paper_cluster":
+        # analytic kernel-eval flops of one Algorithm-2 iteration:
+        # assignment k*b*W*d (x2 for the f_after pass) + Gram k*W^2*d
+        from repro.configs.paper_cluster import CONFIG as MBCFG, EMBED_DIM
+        from repro.core.state import window_size
+        w = window_size(MBCFG.batch_size, MBCFG.tau)
+        mf = 2.0 * (2 * MBCFG.k * MBCFG.batch_size * w * EMBED_DIM
+                    + MBCFG.k * w * w * EMBED_DIM)
+    else:
+        mf = model_flops_estimate(get_config(arch), SHAPES[shape_name])
+    result["model_flops_global"] = mf
+    # cost_analysis flops are per device
+    result["useful_flops_ratio"] = (
+        mf / (flops * n_chips) if flops else None)
+    if "corrected" in result:
+        cf = result["corrected"]["flops_per_device"]
+        result["corrected"]["useful_flops_ratio"] = (
+            mf / (cf * n_chips) if cf else None)
+
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = ("__opt-" + "-".join(sorted(opts))) if opts else ""
+    fname = f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def cells_for(arch: str):
+    if arch == "paper_cluster":
+        return ["cluster_step"]
+    cfg = get_config(arch)
+    out = []
+    for name in SHAPES:
+        ok, _ = applicable(cfg, name)
+        if ok:
+            out.append(name)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--opt", action="append", default=[],
+                    help="beyond-paper perf options (see build_lowerable)")
+    ap.add_argument("--correct-scan", action="store_true",
+                    help="add scan-trip-count-corrected roofline terms "
+                    "(2-point unrolled fit; see scan_corrected_terms)")
+    args = ap.parse_args()
+
+    archs = (all_arch_names() + ["paper_cluster"] if args.arch == "all"
+             else [args.arch.replace("-", "_").replace(".", "_")])
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        shapes = cells_for(arch) if args.shape == "all" else [args.shape]
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape_name} x " \
+                      f"{'2x16x16' if mp else '16x16'}"
+                try:
+                    r = run_cell(arch, shape_name, mp, args.out,
+                                 tuple(args.opt), args.correct_scan)
+                    roof = r.get("corrected", r)["roofline"]
+                    print(f"OK   {tag}: compute {roof['compute_s']:.3e}s "
+                          f"memory {roof['memory_s']:.3e}s collective "
+                          f"{roof['collective_s']:.3e}s -> "
+                          f"{roof['dominant']} "
+                          f"(compile {r['compile_s']}s)", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((tag, repr(e)))
+                    print(f"FAIL {tag}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("\nALL CELLS COMPILED.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,207 @@
+"""Sharding rules: parameter / optimizer / batch / cache PartitionSpecs.
+
+Strategy (DESIGN.md §4): tensor parallelism over 'model', data parallelism
+over ('pod','data'); MoE experts use 'model' as the expert-parallel axis;
+optimizer state is ZeRO-upgraded over 'data'.  Every rule is a preference
+list — the first axis whose size divides the dimension wins, otherwise the
+dimension is replicated (e.g. kv_heads=8 on a 16-wide model axis).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def _pick(mesh: Mesh, shape, prefs) -> P:
+    """prefs: list of (dim, axis) tried in order; first divisible wins."""
+    spec = [None] * len(shape)
+    used = set()
+    for dim, axis in prefs:
+        if dim >= len(shape) or spec[dim] is not None:
+            continue
+        key = axis if isinstance(axis, tuple) else (axis,)
+        if any(a in used for a in key):
+            continue
+        if shape[dim] % _axis_size(mesh, axis) == 0:
+            spec[dim] = axis
+            used.update(key)
+    return P(*spec)
+
+
+# ------------------------------------------------------------ parameters
+def _param_rule(path: str, shape, mesh: Mesh, n_lead: int):
+    """n_lead: stacked-layer leading axes (never sharded)."""
+    m = "model"
+    body = len(shape) - n_lead
+
+    def pk(*prefs):
+        return _pick(mesh, shape, [(d + n_lead, a) for d, a in prefs])
+
+    name = path.split("|")[-1].strip("'[]")
+    if body <= 1:
+        return P()  # norms / scalar vectors: replicate
+    if name == "embed":
+        return pk((0, m))
+    if name == "lm_head":
+        return pk((1, m))
+    if name == "frontend_w":
+        return pk((1, m))
+    if name in ("wq", "wk", "wv") and body == 3:   # GQA (D, H, hd)
+        return pk((1, m), (2, m))
+    if name in ("bq", "bk", "bv"):
+        return pk((0, m), (1, m))
+    if name == "wo":                         # (H, hd, D) / rwkv (D, D)
+        return pk((0, m), (1, m))
+    if name in ("wuq", "wuk", "wuv"):        # MLA (in, H, hd)
+        return pk((1, m))
+    if name in ("wdkv", "wkr", "wdq"):       # MLA down-projections: small
+        return P(*([None] * len(shape)))
+    if name == "router":
+        return P(*([None] * len(shape)))
+    if name in ("wg", "wu", "wd") and body == 3:   # MoE experts (E, *, *)
+        return pk((0, m))
+    if name in ("wg", "wu", "w1", "wk"):     # MLP in-projections (D, F)
+        return pk((1, m))
+    if name in ("wd", "w2", "wv") and body == 2:   # MLP out (F, D)
+        return pk((0, m))
+    if name == "w_in":                       # mamba (D, X)
+        return pk((1, m))
+    if name == "w_out":                      # mamba (d_inner, D)
+        return pk((0, m))
+    if name == "conv_w":                     # (K, C)
+        return pk((1, m))
+    if name in ("wr",):                      # rwkv receptance (D, D)
+        return pk((1, m))
+    if name in ("w1", "w2", "u", "mu"):      # rwkv loras: small
+        return P(*([None] * len(shape)))
+    return P(*([None] * len(shape)))
+
+
+def _n_lead_of(path: str) -> int:
+    # stacked layers: params under 'layers' have 1 leading axis (L,) —
+    # hybrid archs have 2 (groups, attn_every)
+    if "layers" not in path:
+        return 0
+    return path.count("layers_lead")  # patched below
+
+
+def param_specs(params_shape: Any, mesh: Mesh, hybrid: bool = False,
+                replicate_patterns: tuple = ()):
+    """Tree of PartitionSpecs matching the params pytree (shapes or arrays).
+    Leaves whose path contains any of `replicate_patterns` are replicated
+    (e.g. ('tm',) switches rwkv time-mix to pure data parallelism)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        pstr = "|".join(str(p) for p in path)
+        if any(pat in pstr for pat in replicate_patterns):
+            specs.append(P())
+            continue
+        n_lead = 0
+        if "layers" in pstr:
+            n_lead = 2 if hybrid else 1
+        # _param_rule returns a full-rank spec (it offsets by n_lead itself)
+        specs.append(_param_rule(pstr, leaf.shape, mesh, n_lead))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def zero_upgrade(spec_tree: Any, shape_tree: Any, mesh: Mesh,
+                 axis: str = "data"):
+    """ZeRO-1: shard optimizer moments over 'data' on the first replicated,
+    divisible dimension (on top of the parameter's TP sharding)."""
+
+    def up(spec: P, leaf):
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for d, cur in enumerate(parts):
+            if cur is None and leaf.shape[d] % mesh.shape[axis] == 0 \
+                    and leaf.shape[d] > 0:
+                parts[d] = axis
+                break
+        return P(*parts)
+
+    return jax.tree.map(up, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def named(tree_specs: Any, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------------------------------------------ batch
+def batch_specs(batch_shape: Any, mesh: Mesh):
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+
+    def rule(path, leaf):
+        name = str(path[-1]).strip("'[]")
+        shape = leaf.shape
+        if name == "positions" and len(shape) == 3:   # (3, B, S) mrope
+            return _pick(mesh, shape, [(1, dp)])
+        return _pick(mesh, shape, [(0, dp)])
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(p, l) for p, l in flat])
+
+
+# ------------------------------------------------------------------ cache
+def cache_specs(cache_shape: Any, mesh: Mesh, hybrid: bool = False):
+    """Decode caches: batch over data axes when divisible, else the
+    sequence/capacity axis over 'data' (long-context SP), heads over
+    'model' when divisible."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    m = "model"
+
+    def rule(path, leaf):
+        pstr = "|".join(str(p) for p in path)
+        name = pstr.split("|")[-1].strip("'[]")
+        n_lead = 2 if (hybrid and "blocks" in pstr) else 1
+        shape = leaf.shape
+
+        def pk(*prefs):
+            return _pick(mesh, shape,
+                         [(d + n_lead, a) for d, a in prefs])
+
+        if name in ("k", "v"):        # (B, C, K, hd)
+            return pk((0, dp), (2, m), (1, "data"), (3, m))
+        if name == "kpos":            # (B, C)
+            return pk((0, dp), (1, "data"))
+        if name in ("ckv", "kr"):     # (B, C, l)
+            return pk((0, dp), (1, "data"), (2, m))
+        if name == "conv":            # (B, K-1, C)
+            return pk((0, dp), (2, m))
+        if name == "ssm":             # (B, H, P, N)
+            return pk((0, dp), (1, m))
+        if name == "state":           # rwkv (B, nh, hd, hd)
+            return pk((0, dp), (1, m))
+        if name in ("x_tm", "x_cm"):  # (B, D)
+            return pk((0, dp), (1, m))
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(p, l) for p, l in flat])
+
+
+# ------------------------------------------------------------- train state
+def train_state_specs(state_shape: Any, mesh: Mesh, hybrid: bool = False,
+                      replicate_patterns: tuple = ()):
+    """TrainState(params, AdamWState(master, mu, nu, count), step, ef)."""
+    from repro.train.train_step import TrainState
+    from repro.train.optimizer import AdamWState
+
+    ps = param_specs(state_shape.params, mesh, hybrid, replicate_patterns)
+    zp = zero_upgrade(ps, state_shape.params, mesh)
+    opt = AdamWState(master=zp, mu=zp, nu=zp, count=P())
+    ef = (jax.tree.map(lambda _: P(), state_shape.ef_error)
+          if state_shape.ef_error is not None else None)
+    return TrainState(params=ps, opt=opt, step=P(), ef_error=ef)

@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation (the dry-run lowers against these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, Shape
+from repro.models import init_cache, init_params
+from repro.models.config import ModelConfig
+from repro.train import make_train_state
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: Shape):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"labels": _sds((b, s), jnp.int32)}
+    if cfg.frontend == "stub":
+        batch["embeds"] = _sds((b, s, cfg.frontend_dim), jnp.bfloat16)
+    else:
+        batch["tokens"] = _sds((b, s), jnp.int32)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: Shape):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.frontend == "stub":
+        return {"embeds": _sds((b, s, cfg.frontend_dim), jnp.bfloat16)}
+    return {"tokens": _sds((b, s), jnp.int32)}
+
+
+def decode_specs(cfg: ModelConfig, shape: Shape):
+    """(cache, tokens, pos) — 'one new token with a KV cache of seq_len'."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    return cache, _sds((b, 1), jnp.int32), _sds((b,), jnp.int32)
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def train_state_struct(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: make_train_state(init_params(cfg, k)),
+        jax.random.PRNGKey(0))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """The full input pytree for the step lowered at this cell."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return {"state": train_state_struct(cfg),
+                "batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": params_specs(cfg),
+                "batch": prefill_batch_specs(cfg, shape)}
+    cache, tok, pos = decode_specs(cfg, shape)
+    return {"params": params_specs(cfg), "cache": cache,
+            "tokens": tok, "pos": pos}

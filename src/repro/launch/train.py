@@ -1,0 +1,110 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+On this CPU container use --reduced (smoke-sized config); on a TPU pod the
+full config + production mesh engage automatically when >1 device exists.
+Fault tolerance: the loop runs under train.resilience.run_resilient —
+crashes/stragglers restore from the last checkpoint and replay the
+deterministic pipeline.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import EmbedPipeline, TokenPipeline
+from repro.launch import sharding as shl
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_params
+from repro.train import AdamWConfig, make_train_state, make_train_step
+from repro.train.checkpoint import Checkpointer
+from repro.train.resilience import run_resilient
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(dtype="float32")
+    print(f"arch={cfg.name} layers={cfg.n_layers} d_model={cfg.d_model} "
+          f"family={cfg.family}")
+
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    n_params = sum(int(x.size) for x in jax.tree.leaves(params))
+    print(f"params: {n_params / 1e6:.2f}M")
+    state = make_train_state(params, compress=args.compress_grads)
+
+    step_fn = make_train_step(cfg, AdamWConfig(lr=args.lr),
+                              microbatch=args.microbatch,
+                              compress=args.compress_grads)
+    shardings = None
+    if len(jax.devices()) > 1:
+        mesh = make_host_mesh()
+        st_struct = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        specs = shl.train_state_specs(st_struct, mesh,
+                                      hybrid=cfg.family == "hybrid")
+        shardings = shl.named(specs, mesh)
+        state = jax.device_put(state, shardings)
+        step = jax.jit(step_fn, in_shardings=(shardings, None),
+                       out_shardings=(shardings, None), donate_argnums=(0,))
+        print(f"mesh: {dict(mesh.shape)}")
+    else:
+        step = jax.jit(step_fn, donate_argnums=(0,))
+
+    if cfg.frontend == "stub":
+        pipe = EmbedPipeline(cfg.frontend_dim, args.batch, args.seq,
+                             seed=args.seed, vocab=cfg.vocab)
+    else:
+        pipe = TokenPipeline(cfg.vocab, args.batch, args.seq,
+                             seed=args.seed)
+
+    losses = []
+
+    def logging_step(st, batch):
+        st, m = step(st, batch)
+        losses.append(float(m["loss"]))
+        s = int(st.step)
+        if s % args.log_every == 0 or s == 1:
+            print(f"step {s:5d}  loss {losses[-1]:.4f}  "
+                  f"gnorm {float(m['grad_norm']):.3f}")
+        return st, m
+
+    if args.ckpt_dir:
+        ck = Checkpointer(args.ckpt_dir)
+        state, hist = run_resilient(
+            logging_step, pipe, state, args.steps, ck,
+            ckpt_every=args.ckpt_every,
+            make_state_like=lambda: jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state),
+            shardings=shardings)
+    else:
+        for i in range(args.steps):
+            state, _ = logging_step(state, pipe(i))
+
+    print(f"final loss (mean of last 10): {np.mean(losses[-10:]):.4f}  "
+          f"(first 10: {np.mean(losses[:10]):.4f})")
+    return state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    init_params, forward_train, prefill, decode_step, init_cache,
+)

@@ -1,0 +1,223 @@
+"""Attention blocks: GQA (with qk-norm / QKV-bias / sliding-window / M-RoPE)
+and MLA (DeepSeek-V2 multi-head latent attention with absorbed decode).
+
+Cache protocol (decode): each layer's cache is a dict of arrays whose leading
+layout is (B, C, ...) with C = cache capacity (= sliding window size for SWA
+archs — the sub-quadratic long_500k path).  `kpos` tracks the global position
+held in every slot (-1 = empty) so ring overwrites and window masking are
+uniform."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_mrope, apply_rope, dense_init, rms_norm
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- GQA
+def init_gqa(key, cfg: ModelConfig, dtype):
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.n_heads, hd), dtype=dtype),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.n_kv_heads, hd),
+                         dtype=dtype),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.n_kv_heads, hd),
+                         dtype=dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads, hd, cfg.d_model), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, hd), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _rope_qk(cfg: ModelConfig, q, k, pos):
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, pos, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, pos, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k
+
+
+def _qkv(p, cfg: ModelConfig, h):
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def gqa_forward(p, cfg: ModelConfig, h, pos):
+    """Full-sequence path (train / prefill / encode).  h: (B, S, D)."""
+    b, s, _ = h.shape
+    hd = cfg.hd
+    groups = cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _qkv(p, cfg, h)
+    q, k = _rope_qk(cfg, q, k, pos)
+    q = q.reshape(b, s, cfg.n_kv_heads, groups, hd)
+    # When head_dim is the sharded contraction axis (head count not
+    # divisible by the model axis, e.g. arctic's 56 on 16), the score
+    # partial-sums cross devices: attn_scores_bf16 halves that wire
+    # traffic; softmax stays f32 AFTER the reduction (§Perf cell B).
+    acc = jnp.bfloat16 if cfg.attn_scores_bf16 else jnp.float32
+    scores = jnp.einsum("bqhgd,bchd->bhgqc", q, k,
+                        preferred_element_type=acc)
+    scores = scores.astype(jnp.float32) / jnp.sqrt(hd)
+    qi = jnp.arange(s)[:, None]
+    ci = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if cfg.causal:
+        mask &= ci <= qi
+    if cfg.sliding_window is not None:
+        mask &= ci > qi - cfg.sliding_window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    attn = jax.nn.softmax(scores, axis=-1).astype(h.dtype)
+    out = jnp.einsum("bhgqc,bchd->bqhgd", attn, v)
+    out = out.reshape(b, s, cfg.n_heads, hd)
+    return jnp.einsum("bshd,hdo->bso", out, p["wo"])
+
+
+def gqa_cache_init(cfg: ModelConfig, b: int, cache_len: int, dtype):
+    c = min(cache_len, cfg.sliding_window or cache_len)
+    return {
+        "k": jnp.zeros((b, c, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((b, c, cfg.n_kv_heads, cfg.hd), dtype),
+        "kpos": jnp.full((b, c), -1, jnp.int32),
+    }
+
+
+def gqa_decode(p, cfg: ModelConfig, h, pos, cache):
+    """One-token decode.  h: (B, 1, D); pos: (B,) int32 current position."""
+    b, _, _ = h.shape
+    hd = cfg.hd
+    groups = cfg.n_heads // cfg.n_kv_heads
+    c = cache["k"].shape[1]
+    q, k, v = _qkv(p, cfg, h)
+    q, k = _rope_qk(cfg, q, k, pos[:, None]) if cfg.mrope_sections is None \
+        else _rope_qk(cfg, q, k, jnp.broadcast_to(pos[None, :, None],
+                                                  (3, b, 1)))
+    slot = (pos % c)                                        # (B,) ring slot
+    bidx = jnp.arange(b)
+    ck = cache["k"].at[bidx, slot].set(k[:, 0])
+    cv = cache["v"].at[bidx, slot].set(v[:, 0])
+    kpos = cache["kpos"].at[bidx, slot].set(pos)
+    q = q.reshape(b, 1, cfg.n_kv_heads, groups, hd)
+    scores = jnp.einsum("bqhgd,bchd->bhgqc", q, ck
+                        ).astype(jnp.float32) / jnp.sqrt(hd)
+    valid = (kpos >= 0) & (kpos <= pos[:, None])
+    if cfg.sliding_window is not None:
+        valid &= kpos > (pos[:, None] - cfg.sliding_window)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    attn = jax.nn.softmax(scores, axis=-1).astype(h.dtype)
+    out = jnp.einsum("bhgqc,bchd->bqhgd", attn, cv).reshape(b, 1,
+                                                            cfg.n_heads, hd)
+    o = jnp.einsum("bshd,hdo->bso", out, p["wo"])
+    return o, {"k": ck, "v": cv, "kpos": kpos}
+
+
+# --------------------------------------------------------------------- MLA
+def init_mla(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 8)
+    qin = cfg.q_lora or cfg.d_model
+    p = {
+        "wdkv": dense_init(ks[0], (cfg.d_model, cfg.kv_lora), dtype=dtype),
+        "wkr": dense_init(ks[1], (cfg.d_model, cfg.rope_head_dim),
+                          dtype=dtype),
+        "wuk": dense_init(ks[2], (cfg.kv_lora, cfg.n_heads,
+                                  cfg.nope_head_dim), dtype=dtype),
+        "wuv": dense_init(ks[3], (cfg.kv_lora, cfg.n_heads, cfg.v_head_dim),
+                          dtype=dtype),
+        "wuq": dense_init(ks[4], (qin, cfg.n_heads,
+                                  cfg.nope_head_dim + cfg.rope_head_dim),
+                          dtype=dtype),
+        "wo": dense_init(ks[5], (cfg.n_heads, cfg.v_head_dim, cfg.d_model),
+                         dtype=dtype),
+        "kv_norm": jnp.ones((cfg.kv_lora,), dtype),
+    }
+    if cfg.q_lora:
+        p["wdq"] = dense_init(ks[6], (cfg.d_model, cfg.q_lora), dtype=dtype)
+        p["q_norm"] = jnp.ones((cfg.q_lora,), dtype)
+    return p
+
+
+def _mla_q(p, cfg: ModelConfig, h, pos):
+    if cfg.q_lora:
+        cq = rms_norm(h @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    else:
+        cq = h
+    q = jnp.einsum("bsq,qhd->bshd", cq, p["wuq"])
+    qn, qr = jnp.split(q, [cfg.nope_head_dim], axis=-1)
+    qr = apply_rope(qr, pos, cfg.rope_theta)
+    return qn, qr
+
+
+def mla_forward(p, cfg: ModelConfig, h, pos):
+    b, s, _ = h.shape
+    ckv = rms_norm(h @ p["wdkv"], p["kv_norm"], cfg.norm_eps)   # (B,S,kvl)
+    kr = apply_rope((h @ p["wkr"])[:, :, None, :], pos,
+                    cfg.rope_theta)[:, :, 0]                    # (B,S,rhd)
+    qn, qr = _mla_q(p, cfg, h, pos)
+    kn = jnp.einsum("bsl,lhd->bshd", ckv, p["wuk"])
+    v = jnp.einsum("bsl,lhd->bshd", ckv, p["wuv"])
+    scale = 1.0 / jnp.sqrt(cfg.nope_head_dim + cfg.rope_head_dim)
+    scores = (jnp.einsum("bqhd,bchd->bhqc", qn, kn)
+              + jnp.einsum("bqhd,bcd->bhqc", qr, kr)
+              ).astype(jnp.float32) * scale
+    qi = jnp.arange(s)[:, None]
+    mask = jnp.arange(s)[None, :] <= qi
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    attn = jax.nn.softmax(scores, axis=-1).astype(h.dtype)
+    out = jnp.einsum("bhqc,bchd->bqhd", attn, v)
+    return jnp.einsum("bshd,hdo->bso", out, p["wo"])
+
+
+def mla_cache_init(cfg: ModelConfig, b: int, cache_len: int, dtype):
+    return {
+        "ckv": jnp.zeros((b, cache_len, cfg.kv_lora), dtype),
+        "kr": jnp.zeros((b, cache_len, cfg.rope_head_dim), dtype),
+        "kpos": jnp.full((b, cache_len), -1, jnp.int32),
+    }
+
+
+def mla_decode(p, cfg: ModelConfig, h, pos, cache):
+    """Absorbed-matrix decode: scores/values computed in the compressed
+    kv_lora space — the 576-per-token cache that is MLA's point."""
+    b = h.shape[0]
+    ckv_t = rms_norm(h @ p["wdkv"], p["kv_norm"], cfg.norm_eps)  # (B,1,kvl)
+    kr_t = apply_rope((h @ p["wkr"])[:, :, None, :], pos[:, None],
+                      cfg.rope_theta)[:, :, 0]                   # (B,1,rhd)
+    bidx = jnp.arange(b)
+    slot = pos % cache["ckv"].shape[1]
+    ckv = cache["ckv"].at[bidx, slot].set(ckv_t[:, 0])
+    kr = cache["kr"].at[bidx, slot].set(kr_t[:, 0])
+    kpos = cache["kpos"].at[bidx, slot].set(pos)
+
+    qn, qr = _mla_q(p, cfg, h, pos[:, None])                    # (B,1,H,*)
+    q_c = jnp.einsum("bqhd,lhd->bqhl", qn, p["wuk"])            # absorb W_uk
+    scale = 1.0 / jnp.sqrt(cfg.nope_head_dim + cfg.rope_head_dim)
+    scores = (jnp.einsum("bqhl,bcl->bhqc", q_c, ckv)
+              + jnp.einsum("bqhd,bcd->bhqc", qr, kr)
+              ).astype(jnp.float32) * scale
+    valid = (kpos >= 0) & (kpos <= pos[:, None])
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    attn = jax.nn.softmax(scores, axis=-1).astype(h.dtype)
+    ctx_c = jnp.einsum("bhqc,bcl->bqhl", attn, ckv)
+    out = jnp.einsum("bqhl,lhd->bqhd", ctx_c, p["wuv"])         # absorb W_uv
+    o = jnp.einsum("bshd,hdo->bso", out, p["wo"])
+    return o, {"ckv": ckv, "kr": kr, "kpos": kpos}

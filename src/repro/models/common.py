@@ -1,0 +1,58 @@
+"""Shared building blocks: norms, rotary embeddings (incl. M-RoPE), init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(
+        x.dtype)
+
+
+def dense_init(key, shape, scale: float = 1.0, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    return (jax.random.normal(key, shape, dtype)
+            * (scale / jnp.sqrt(jnp.maximum(fan_in, 1))))
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); pos: (B, S) int32 -> rotated x (interleaved pairs)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs    # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, pos3: jax.Array, sections, theta: float
+                ) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl): pos3 (3, B, S) = (temporal, h, w) ids;
+    `sections` split hd/2 frequency bands across the three position streams."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    sec = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+    # pick the position stream per frequency band
+    pos_per_band = jnp.take_along_axis(
+        pos3.transpose(1, 2, 0).astype(jnp.float32),    # (B, S, 3)
+        jnp.broadcast_to(sec[None, None, :],
+                         (x.shape[0], x.shape[1], hd // 2)),
+        axis=-1)                                        # (B, S, hd/2)
+    ang = pos_per_band * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

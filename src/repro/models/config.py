@@ -1,0 +1,122 @@
+"""Model configuration covering all 10 assigned architectures.
+
+One frozen dataclass; every flag corresponds to a documented architectural
+feature of some assigned config (see src/repro/configs/)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"     # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab: int = 1024
+    head_dim: Optional[int] = None          # default d_model // n_heads
+
+    # ---- attention flags ----
+    qk_norm: bool = False                   # qwen3
+    qkv_bias: bool = False                  # qwen2
+    sliding_window: Optional[int] = None    # h2o-danube SWA
+    rope_theta: float = 1e4
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # qwen2-vl M-RoPE
+    causal: bool = True                     # False: hubert encoder
+
+    # ---- MLP ----
+    mlp: str = "swiglu"                     # swiglu | sq_relu | gelu
+
+    # ---- MLA (deepseek-v2) ----
+    mla: bool = False
+    kv_lora: int = 512
+    q_lora: Optional[int] = None
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+    # ---- MoE ----
+    moe: bool = False
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 2
+    moe_d_ff: int = 0
+    dense_residual: bool = False            # arctic: dense FFN || MoE
+    capacity_factor: float = 1.25
+
+    # ---- hybrid / SSM ----
+    attn_every: int = 0                     # zamba2: shared attn block period
+    ssm_state: int = 64
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # ---- embeddings / frontend ----
+    tie_embeddings: bool = False
+    frontend: str = "none"                  # none | stub (vlm patch / audio frame)
+    frontend_dim: int = 0                   # stub input feature dim
+
+    # ---- numerics / training ----
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-5
+    remat: bool = True
+
+    # ---- beyond-paper perf options (§Perf, default off = baseline) ----
+    moe_group_dispatch: bool = False   # per-data-shard MoE routing (EP)
+    rwkv_chunked: bool = False         # chunked-matmul WKV (vs seq scan)
+    rwkv_chunk: int = 32               # WKV chunk length (numerics note)
+    attn_scores_bf16: bool = False     # bf16 score partials on the wire
+                                       # (softmax still f32 post-reduce)
+    scan_unroll: bool = False          # unroll layer scans (measurement
+                                       # mode: XLA cost_analysis counts a
+                                       # while body ONCE — see §Roofline)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else \
+            self.d_model // self.n_heads
+
+    @property
+    def is_encoder(self) -> bool:
+        return not self.causal
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for the long_500k cell (see DESIGN.md skip notes)."""
+        return (self.family in ("ssm", "hybrid")
+                or self.sliding_window is not None)
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Smoke-test-sized config of the same family (per instructions:
+        small layers/width, few experts, tiny vocab)."""
+        small = dict(
+            n_layers=min(self.n_layers, 4) if self.attn_every == 0
+            else 2 * max(self.attn_every, 1),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 4) if self.n_kv_heads
+            < self.n_heads else 4,
+            d_ff=256,
+            vocab=512,
+            head_dim=32,
+            kv_lora=32, q_lora=(48 if self.q_lora else None),
+            rope_head_dim=16, nope_head_dim=32, v_head_dim=32,
+            n_experts=8 if self.moe else 0,
+            n_shared_experts=min(self.n_shared_experts, 1),
+            moe_d_ff=64 if self.moe else 0,
+            ssm_state=16, ssm_head_dim=16, ssm_chunk=32,
+            frontend_dim=64 if self.frontend == "stub" else 0,
+            sliding_window=64 if self.sliding_window else None,
+            mrope_sections=(4, 6, 6) if self.mrope_sections else None,
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, **small)

@@ -1,0 +1,178 @@
+"""Mamba2 (SSD) block — chunked matmul formulation (TPU-native: the
+intra-chunk work is MXU matmuls; the inter-chunk recurrence is a short
+lax.scan over S/chunk steps).  Follows the minimal SSD reference of the
+Mamba2 paper; single B/C group broadcast across heads (zamba2's layout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+from repro.models.config import ModelConfig
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype):
+    d_inner, nheads = _dims(cfg)
+    n = cfg.ssm_state
+    conv_ch = d_inner + 2 * n                      # x + B + C get conv'd
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj -> [z, xBC, dt]
+        "w_in": dense_init(ks[0], (cfg.d_model,
+                                   2 * d_inner + 2 * n + nheads),
+                           dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_ch), dtype=dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((nheads,), jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "out_norm": jnp.ones((d_inner,), dtype),
+        "w_out": dense_init(ks[2], (d_inner, cfg.d_model), dtype=dtype),
+    }
+
+
+def _segsum(x):
+    """x: (..., Q) -> (..., Q, Q) with out[i,j] = sum_{j < l <= i} x[l],
+    -inf above the diagonal (strictly lower-triangular cumulative sums)."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _ssd_chunked(x, dt, a, bmat, cmat, chunk):
+    """SSD scan.  x: (B,S,H,P) pre-multiplied by dt; dt: (B,S,H);
+    a: (H,) negative; bmat/cmat: (B,S,N) single group -> broadcast to heads.
+    Returns y: (B,S,H,P) and final state (B,H,P,N).
+
+    S is front-padded to a chunk multiple with dt = 0 entries: decay
+    exp(0*A) = 1 and zero input contribution leave the recurrence exact."""
+    bsz, s_orig, h, p = x.shape
+    pad = (-s_orig) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (pad, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (pad, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (pad, 0), (0, 0)))
+    bsz, s, h, p = x.shape
+    n = bmat.shape[-1]
+    nc = s // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = bmat.reshape(bsz, nc, chunk, n)
+    cc = cmat.reshape(bsz, nc, chunk, n)
+
+    da = dtc * a[None, None, None, :]                  # (B,NC,Q,H)
+    da = jnp.transpose(da, (0, 1, 3, 2))               # (B,NC,H,Q)
+    da_cs = jnp.cumsum(da, axis=-1)                    # (B,NC,H,Q)
+
+    # intra-chunk (diagonal blocks): L = exp(segsum(dA))
+    el = jnp.exp(_segsum(da))                          # (B,NC,H,Q,Q)
+    y_diag = jnp.einsum("bcqn,bckn,bchqk,bckhp->bcqhp",
+                        cc, bc, el.astype(x.dtype), xc)
+
+    # chunk -> state contributions
+    decay_states = jnp.exp(da_cs[..., -1:] - da_cs)    # (B,NC,H,Q)
+    states = jnp.einsum("bckn,bchk,bckhp->bchpn",
+                        bc, decay_states.astype(x.dtype), xc)  # (B,NC,H,P,N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cs[..., -1])              # (B,NC,H)
+
+    def scan_fn(hstate, inp):
+        st, dec = inp                                  # (B,H,P,N), (B,H)
+        prev = hstate
+        hstate = dec[..., None, None].astype(x.dtype) * hstate + st
+        return hstate, prev
+
+    h0 = jnp.zeros((bsz, h, p, n), x.dtype)
+    hlast, hprev = jax.lax.scan(
+        scan_fn, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay,
+                                                               1, 0)))
+    hprev = jnp.moveaxis(hprev, 0, 1)                  # (B,NC,H,P,N)
+
+    # off-diagonal: contribution of the carried state into each chunk
+    state_decay = jnp.exp(da_cs)                       # (B,NC,H,Q)
+    y_off = jnp.einsum("bcqn,bchpn,bchq->bcqhp",
+                       cc, hprev, state_decay.astype(x.dtype))
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y[:, pad:], hlast
+
+
+def _causal_conv(x, w, b):
+    """x: (B,S,C); w: (K,C) depthwise causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+              for i in range(k))
+    return out + b[None, None, :]
+
+
+def _split_proj(p, cfg, h):
+    d_inner, nheads = _dims(cfg)
+    n = cfg.ssm_state
+    zxbcdt = h @ p["w_in"]
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    return z, xbc, dt_raw, d_inner, nheads, n
+
+
+def mamba2_forward(p, cfg: ModelConfig, h, pos=None):
+    """h: (B, S, D) -> (B, S, D).  S must be a multiple of cfg.ssm_chunk
+    (transformer.py pads)."""
+    bsz, s, _ = h.shape
+    z, xbc, dt_raw, d_inner, nheads, n = _split_proj(p, cfg, h)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    x, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])       # (B,S,H)
+    a = -jnp.exp(p["a_log"])                               # (H,)
+    xh = x.reshape(bsz, s, nheads, cfg.ssm_head_dim)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    y, _ = _ssd_chunked(xdt, dt, a, bmat, cmat, cfg.ssm_chunk)
+    y = y + p["d_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(bsz, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return y @ p["w_out"]
+
+
+def mamba2_cache_init(cfg: ModelConfig, b: int, dtype):
+    d_inner, nheads = _dims(cfg)
+    n = cfg.ssm_state
+    return {
+        "conv": jnp.zeros((b, cfg.ssm_conv - 1, d_inner + 2 * n), dtype),
+        "ssm": jnp.zeros((b, nheads, cfg.ssm_head_dim, n), dtype),
+    }
+
+
+def mamba2_decode(p, cfg: ModelConfig, h, pos, cache):
+    """One-token recurrent update — O(1) in sequence length (the long_500k
+    path for hybrid archs)."""
+    bsz = h.shape[0]
+    z, xbc, dt_raw, d_inner, nheads, n = _split_proj(p, cfg, h)
+    # conv ring: window = [cache, current]
+    win = jnp.concatenate([cache["conv"], xbc], axis=1)    # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    x, bmat, cmat = jnp.split(xbc1, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])       # (B,1,H)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt[:, 0] * a[None])                       # (B,H)
+    xh = x.reshape(bsz, nheads, cfg.ssm_head_dim)
+    dbx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0].astype(xh.dtype),
+                     bmat[:, 0], xh)
+    ssm = da[..., None, None].astype(xh.dtype) * cache["ssm"] + dbx
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0], ssm)
+    y = y + p["d_skip"][None, :, None].astype(y.dtype) * xh
+    y = y.reshape(bsz, 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    new_cache = {"conv": win[:, 1:], "ssm": ssm}
+    return y @ p["w_out"], new_cache

@@ -1,0 +1,177 @@
+"""MLP variants (SwiGLU / squared-ReLU / GELU) and the MoE layer
+(top-k routing, capacity-based fixed-shape dispatch, shared experts,
+arctic-style parallel dense residual)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.config import ModelConfig
+
+
+# ------------------------------------------------------------- dense MLPs
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {"wg": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+                "wu": dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+                "wd": dense_init(ks[2], (d_ff, d_model), dtype=dtype)}
+    return {"w1": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+            "w2": dense_init(ks[1], (d_ff, d_model), dtype=dtype)}
+
+
+def mlp_forward(p, kind: str, h):
+    if kind == "swiglu":
+        return (jax.nn.silu(h @ p["wg"]) * (h @ p["wu"])) @ p["wd"]
+    if kind == "sq_relu":                     # nemotron-4
+        return jnp.square(jax.nn.relu(h @ p["w1"])) @ p["w2"]
+    if kind == "gelu":                        # hubert
+        return jax.nn.gelu(h @ p["w1"]) @ p["w2"]
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------------- MoE
+def init_moe(key, cfg: ModelConfig, dtype):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32),
+        "wg": dense_init(ks[1], (e, d, f), dtype=dtype),
+        "wu": dense_init(ks[2], (e, d, f), dtype=dtype),
+        "wd": dense_init(ks[3], (e, f, d), dtype=dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, f * cfg.n_shared_experts,
+                               "swiglu", dtype)
+    if cfg.dense_residual:
+        p["dense"] = init_mlp(ks[5], d, cfg.d_ff, "swiglu", dtype)
+    return p
+
+
+def _moe_dispatch(p, cfg: ModelConfig, x, cap):
+    """x: (T, D) -> (buckets (E, C, D), combine metadata).  Fixed-shape
+    capacity dispatch via per-slot one-hot cumsum ranks."""
+    t, d = x.shape
+    e, kk = cfg.n_experts, cfg.top_k
+    logits = (x.astype(jnp.float32) @ p["router"])          # (T, E)
+    gates, idx = jax.lax.top_k(logits, kk)                  # (T, kk)
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    fill = jnp.zeros((e,), jnp.int32)
+    buckets = jnp.zeros((e, cap, d), x.dtype)
+    token_slot = []
+    for slot in range(kk):
+        eid = idx[:, slot]                                  # (T,)
+        oh = jax.nn.one_hot(eid, e, dtype=jnp.int32)        # (T, E)
+        rank = (jnp.cumsum(oh, axis=0) - 1)[jnp.arange(t), eid] + fill[eid]
+        keep = rank < cap
+        bslot = jnp.where(keep, rank, cap)                  # cap => dropped
+        buckets = buckets.at[eid, bslot].set(
+            jnp.where(keep[:, None], x, 0).astype(x.dtype), mode="drop")
+        token_slot.append((eid, bslot, keep))
+        fill = fill + jnp.sum(oh, axis=0).astype(jnp.int32)
+    return buckets, (gates, token_slot)
+
+
+def _moe_combine(y, meta, t, d, cap):
+    """y: (E, C, D) expert outputs -> (T, D) gate-weighted combine.
+    Token-side gather y[eid] — simple, but under EP sharding GSPMD must
+    all-gather y along 'model' (§Perf cell B, refuted path)."""
+    gates, token_slot = meta
+    out = jnp.zeros((t, d), jnp.float32)
+    for slot, (eid, bslot, keep) in enumerate(token_slot):
+        contrib = y[eid, jnp.minimum(bslot, cap - 1)]
+        out = out + jnp.where(keep[:, None],
+                              gates[:, slot][:, None] * contrib, 0.0)
+    return out
+
+
+def _moe_combine_scatter(y, meta, t, d, cap):
+    """Expert-side combine: invert the dispatch into (E, C) -> token
+    scatter-adds.  Each expert shard produces a partial (T, D) that XLA
+    psums over 'model' — no all-gather of the (E, C, D) outputs
+    (§Perf cell B, confirmed path)."""
+    gates, token_slot = meta
+    e = y.shape[0]
+    target = jnp.full((e, cap), t, jnp.int32)           # t == dropped
+    weight = jnp.zeros((e, cap), jnp.float32)
+    for slot, (eid, bslot, keep) in enumerate(token_slot):
+        tid = jnp.where(keep, jnp.arange(t), t)
+        target = target.at[eid, bslot].set(tid, mode="drop")
+        weight = weight.at[eid, bslot].set(
+            jnp.where(keep, gates[:, slot], 0.0), mode="drop")
+    out = jnp.zeros((t, d), jnp.float32)
+    out = out.at[target.reshape(-1)].add(
+        weight.reshape(-1, 1) * y.reshape(e * cap, d).astype(jnp.float32),
+        mode="drop")
+    return out
+
+
+def _expert_ffn(p, buckets):
+    """(..., E, C, D) x (E, D, F) batched expert SwiGLU."""
+    g = jax.nn.silu(jnp.einsum("...ecd,edf->...ecf", buckets, p["wg"]))
+    u = jnp.einsum("...ecd,edf->...ecf", buckets, p["wu"])
+    return jnp.einsum("...ecf,efd->...ecd", g * u, p["wd"])
+
+
+def moe_forward(p, cfg: ModelConfig, h):
+    """h: (B, S, D) -> (B, S, D).
+
+    Baseline path: GLOBAL capacity dispatch — tokens -> (E, C, D) buckets ->
+    batched expert SwiGLU -> weighted combine.  Experts (leading E axis)
+    shard over 'model' (EP); overflow tokens are dropped (their residual
+    passes through), standard practice.
+
+    ``cfg.moe_group_dispatch`` (beyond-paper §Perf optimization): routing,
+    capacity and combine are computed PER DATA-SHARD GROUP (G = dp size), so
+    the (G, E, Cg, D) buckets shard as (data, model, -, -) and the only
+    cross-device movement is the model-axis all-to-all of routed tokens —
+    GSPMD no longer reshards a global (E, C, D) tensor over all chips.
+    """
+    from repro.launch import context as ctx
+
+    b, s, d = h.shape
+    t = b * s
+    e, kk = cfg.n_experts, cfg.top_k
+
+    groups = ctx.dp_size() if cfg.moe_group_dispatch else 1
+    if groups > 1 and b % groups == 0:
+        tg = t // groups
+        cap = int(cfg.capacity_factor * kk * tg / e + 1)
+        x = h.reshape(groups, tg, d)
+        x = ctx.constrain(x, "data*", None, None)
+        buckets, meta = jax.vmap(
+            lambda xx: _moe_dispatch(p, cfg, xx, cap))(x)   # (G, E, C, D)
+        buckets = ctx.constrain(buckets, "data*", "model", None, None)
+        y = _expert_ffn(p, buckets)                          # (G, E, C, D)
+        y = ctx.constrain(y, "data*", "model", None, None)
+        out = jax.vmap(
+            lambda yy, gg, ts: _moe_combine_scatter(yy, (gg, ts), tg, d,
+                                                    cap)
+        )(y, meta[0], meta[1])
+        out = ctx.constrain(out, "data*", None, None)
+        out = out.astype(h.dtype).reshape(b, s, d)
+    else:
+        cap = int(cfg.capacity_factor * kk * t / e + 1)
+        buckets, meta = _moe_dispatch(p, cfg, h.reshape(t, d), cap)
+        y = _expert_ffn(p, buckets)
+        out = _moe_combine(y, meta, t, d, cap).astype(h.dtype)
+        out = out.reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        out = out + mlp_forward(p["shared"], "swiglu", h)
+    if cfg.dense_residual:
+        out = out + mlp_forward(p["dense"], "swiglu", h)
+    return out
+
+
+def moe_aux_loss(p, cfg: ModelConfig, h):
+    """Load-balance auxiliary loss (Switch-style): E * sum_e f_e * p_e."""
+    b, s, d = h.shape
+    x = h.reshape(b * s, d).astype(jnp.float32)
+    logits = x @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(logits, cfg.top_k)
+    frac = jnp.mean(jax.nn.one_hot(idx[:, 0], cfg.n_experts), axis=0)
+    return cfg.n_experts * jnp.sum(frac * jnp.mean(probs, axis=0))

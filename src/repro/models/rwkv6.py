@@ -1,0 +1,217 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent per-channel decay and
+channel-mix (arXiv:2404.05892).
+
+Train path: sequential lax.scan over time (the paper-faithful recurrence).
+This is deliberately the BASELINE — it is memory-bound on TPU (elementwise
+state updates, no MXU work), which the roofline analysis surfaces; the
+chunked matmul re-formulation is a §Perf hillclimb (see EXPERIMENTS.md).
+Decode path: O(1) recurrent update — the attention-free long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+from repro.models.config import ModelConfig
+
+
+def _heads(cfg: ModelConfig):
+    hd = cfg.ssm_head_dim
+    return cfg.d_model // hd, hd
+
+
+def init_rwkv6_timemix(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    nh, hd = _heads(cfg)
+    lora = max(32, d // 16)
+    ks = jax.random.split(key, 10)
+    return {
+        # token-shift interpolation factors per stream (r, k, v, w, g)
+        "mu": jnp.full((5, d), 0.5, dtype),
+        "wr": dense_init(ks[0], (d, d), dtype=dtype),
+        "wk": dense_init(ks[1], (d, d), dtype=dtype),
+        "wv": dense_init(ks[2], (d, d), dtype=dtype),
+        "wg": dense_init(ks[3], (d, d), dtype=dtype),
+        "wo": dense_init(ks[4], (d, d), dtype=dtype),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(x w1) w2))
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "w1": dense_init(ks[5], (d, lora), dtype=dtype),
+        "w2": dense_init(ks[6], (lora, d), scale=0.1, dtype=dtype),
+        "u": dense_init(ks[7], (nh, hd), dtype=jnp.float32),  # bonus
+        "ln_x": jnp.ones((d,), dtype),
+    }
+
+
+def _timemix_streams(p, cfg, x, x_prev):
+    """Token shift: per-stream lerp between x_t and x_{t-1}."""
+    mu = p["mu"].astype(x.dtype)
+    xs = [x + (x_prev - x) * mu[i] for i in range(5)]
+    r = xs[0] @ p["wr"]
+    k = xs[1] @ p["wk"]
+    v = xs[2] @ p["wv"]
+    g = jax.nn.silu(xs[4] @ p["wg"])
+    w = jnp.exp(-jnp.exp(
+        p["w0"][None] + (jnp.tanh(xs[3] @ p["w1"]) @ p["w2"])
+        .astype(jnp.float32)))                            # (.., D) in (0,1)
+    return r, k, v, g, w
+
+
+def _wkv_step(state, r, k, v, w, u, nh, hd):
+    """state: (B, nh, hd, hd) [k-dim, v-dim].  One recurrence step."""
+    rb = r.reshape(-1, nh, hd)
+    kb = k.reshape(-1, nh, hd)
+    vb = v.reshape(-1, nh, hd)
+    wb = w.reshape(-1, nh, hd)
+    kv = jnp.einsum("bhk,bhv->bhkv", kb, vb)
+    out = jnp.einsum("bhk,bhkv->bhv", rb,
+                     state + u[None, :, :, None].astype(state.dtype) * kv)
+    new_state = wb[..., None].astype(state.dtype) * state + kv
+    return new_state, out
+
+
+def _wkv_sequential(r, k, v, w, u, nh, hd, b):
+    def step(state, inp):
+        rt, kt, vt, wt = inp
+        state, out = _wkv_step(state, rt, kt, vt, wt, u, nh, hd)
+        return state, out
+
+    state0 = jnp.zeros((b, nh, hd, hd), r.dtype)
+    xs = (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(w.astype(r.dtype), 1, 0))
+    stateN, outs = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(outs, 0, 1), stateN
+
+
+def _wkv_chunked(r, k, v, w, u, nh, hd, chunk):
+    """Exact chunked-matmul WKV (beyond-paper §Perf): turns the elementwise
+    recurrence into MXU matmuls.  Per chunk of length Q, with per-channel
+    log-decay lw and inclusive cumulative sums L_i = sum_{l<=i} lw_l:
+
+      o_i    = r_i . S_{chunk-start} * exp(L_{i-1})                (carry-in)
+             + sum_{j<i} [r_i exp(L_{i-1} - L_j)] k_j^T v_j        (intra)
+             + u * (r_i . k_i) v_i                                  (bonus)
+      S_end  = exp(L_Q) * S_start + sum_j (k_j exp(L_Q - L_j))^T v_j
+
+    Every exponent is <= 0 (decays), so all rescaled factors are <= 1 —
+    no overflow, validated against the sequential oracle in tests."""
+    b, s, d = r.shape
+    q = chunk
+    nc = s // q
+
+    def hsplit(x):
+        return x.reshape(b, nc, q, nh, hd)
+
+    rc, kc, vc = hsplit(r), hsplit(k), hsplit(v)
+    # decay clamp: |log w| <= 160/Q keeps every rescaled factor below
+    # exp(80) < f32 max.  At Q=64 this only constrains w >= 0.082/step —
+    # far below trained RWKV decays (documented §Perf numerics note).
+    lw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-38, 1.0))
+    lw = jnp.maximum(lw, -160.0 / q).reshape(b, nc, q, nh, hd)
+    lcum = jnp.cumsum(lw, axis=2)                       # L_i inclusive
+    lend = lcum[:, :, -1:]                              # L_Q
+    mid = 0.5 * lend                                    # per-channel ref
+
+    # rescaled factors: each exponent is within +-|L_Q|/2 (no overflow),
+    # and every PRODUCT r'_i k'_j = r_i k_j exp(L_{i-1} - L_j) <= r_i k_j.
+    r_in = rc * jnp.exp(lcum - lw).astype(rc.dtype)     # r_i W_{i-1}
+    r_rel = rc * jnp.exp(lcum - lw - mid).astype(rc.dtype)
+    k_rel = kc * jnp.exp(mid - lcum).astype(kc.dtype)   # k_j W_mid / W_j
+
+    # intra-chunk: scores_ij = r_rel_i . k_rel_j = r_i k_j exp(L_{i-1}-L_j)
+    scores = jnp.einsum("bcqhk,bcjhk->bchqj", r_rel, k_rel)
+    mask = jnp.tril(jnp.ones((q, q), bool), k=-1)
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    y_intra = jnp.einsum("bchqj,bcjhv->bcqhv", scores, vc)
+    bonus = jnp.einsum("bcqhk,bcqhk->bcqh", rc,
+                       u[None, None, None].astype(rc.dtype) * kc)
+    y_intra = y_intra + bonus[..., None] * vc
+
+    # chunk state contributions: need k_j exp(L_Q - L_j) = k_rel * exp(mid)
+    states = jnp.einsum("bcjhk,bcjhv->bchkv", k_rel, vc) \
+        * jnp.exp(mid)[:, :, 0, :, :, None].astype(kc.dtype)
+    cdecay = jnp.exp(lend[:, :, 0])                       # (B,NC,H,hd)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                     # (B,H,K,V),(B,H,K)
+        prev = carry
+        carry = dec[..., None].astype(carry.dtype) * carry + st
+        return carry, prev
+
+    s0 = jnp.zeros((b, nh, hd, hd), r.dtype)
+    stateN, sprev = jax.lax.scan(
+        scan_fn, s0, (jnp.moveaxis(states, 1, 0),
+                      jnp.moveaxis(cdecay, 1, 0)))
+    sprev = jnp.moveaxis(sprev, 0, 1)                     # (B,NC,H,K,V)
+
+    y_carry = jnp.einsum("bcqhk,bchkv->bcqhv", r_in, sprev)
+    y = (y_intra + y_carry).reshape(b, s, nh, hd)
+    return y.reshape(b, s, d), stateN
+
+
+def rwkv6_timemix_forward(p, cfg: ModelConfig, h, pos=None):
+    """h: (B, S, D); sequential scan baseline, or chunked matmuls when
+    cfg.rwkv_chunked (see module doc / §Perf)."""
+    b, s, d = h.shape
+    nh, hd = _heads(cfg)
+    x_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, w = _timemix_streams(p, cfg, h, x_prev)
+
+    if cfg.rwkv_chunked and s % cfg.rwkv_chunk == 0:
+        out, _ = _wkv_chunked(r, k, v, w, p["u"], nh, hd, cfg.rwkv_chunk)
+    else:
+        out, _ = _wkv_sequential(r, k, v, w, p["u"], nh, hd, b)
+        out = out.reshape(b, s, d)
+    out = rms_norm(out, p["ln_x"], cfg.norm_eps) * g
+    return out @ p["wo"]
+
+
+def init_rwkv6_chanmix(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": jnp.full((2, d), 0.5, dtype),
+        "wk": dense_init(ks[0], (d, f), dtype=dtype),
+        "wv": dense_init(ks[1], (f, d), dtype=dtype),
+        "wr": dense_init(ks[2], (d, d), dtype=dtype),
+    }
+
+
+def rwkv6_chanmix_forward(p, cfg: ModelConfig, h):
+    x_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    mu = p["mu"].astype(h.dtype)
+    xk = h + (x_prev - h) * mu[0]
+    xr = h + (x_prev - h) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+
+
+def rwkv6_cache_init(cfg: ModelConfig, b: int, dtype):
+    nh, hd = _heads(cfg)
+    return {
+        "state": jnp.zeros((b, nh, hd, hd), dtype),
+        "x_tm": jnp.zeros((b, cfg.d_model), dtype),   # prev token (time-mix)
+        "x_cm": jnp.zeros((b, cfg.d_model), dtype),   # prev token (chan-mix)
+    }
+
+
+def rwkv6_timemix_decode(p, cfg: ModelConfig, h, cache):
+    b, _, d = h.shape
+    nh, hd = _heads(cfg)
+    x = h[:, 0]
+    r, k, v, g, w = _timemix_streams(p, cfg, x, cache["x_tm"])
+    state, out = _wkv_step(cache["state"], r, k, v, w.astype(h.dtype),
+                           p["u"], nh, hd)
+    out = out.reshape(b, d)
+    out = rms_norm(out, p["ln_x"], cfg.norm_eps) * g
+    return (out @ p["wo"])[:, None], {"state": state, "x_tm": x}
+
+
+def rwkv6_chanmix_decode(p, cfg: ModelConfig, h, cache):
+    x = h[:, 0]
+    mu = p["mu"].astype(h.dtype)
+    xk = x + (cache["x_cm"] - x) * mu[0]
+    xr = x + (cache["x_cm"] - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    return out[:, None], {"x_cm": x}

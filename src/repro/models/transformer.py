@@ -1,0 +1,405 @@
+"""Model stack: init / train-forward / prefill / decode for all families.
+
+* Layers are stacked on a leading axis and applied with lax.scan (one layer
+  lowered once -> small HLO even for 96-layer models) with optional remat.
+* ``hybrid`` (zamba2): groups of `attn_every` Mamba2 layers followed by ONE
+  shared full-attention block (parameters reused across groups — zamba2's
+  signature trick); the shared block keeps a per-group KV cache.
+* ``ssm`` (rwkv6): time-mix + channel-mix blocks, attention-free.
+* ``audio`` / ``vlm``: the modality frontend is a STUB — inputs arrive as
+  precomputed frame/patch embeddings of `frontend_dim` (per instructions);
+  vlm additionally owns a token embedding for text decode with M-RoPE.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba2, mlp, rwkv6
+from repro.models.common import dense_init, rms_norm
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------------ init
+def _init_block(cfg: ModelConfig, key) -> Params:
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    if cfg.family == "ssm":
+        return {"norm1": jnp.ones((cfg.d_model,), dt),
+                "tm": rwkv6.init_rwkv6_timemix(k1, cfg, dt),
+                "norm2": jnp.ones((cfg.d_model,), dt),
+                "cm": rwkv6.init_rwkv6_chanmix(k2, cfg, dt)}
+    if cfg.family == "hybrid":
+        return {"norm1": jnp.ones((cfg.d_model,), dt),
+                "mamba": mamba2.init_mamba2(k1, cfg, dt)}
+    block = {"norm1": jnp.ones((cfg.d_model,), dt),
+             "norm2": jnp.ones((cfg.d_model,), dt)}
+    block["attn"] = (attn.init_mla(k1, cfg, dt) if cfg.mla
+                     else attn.init_gqa(k1, cfg, dt))
+    block["mlp"] = (mlp.init_moe(k2, cfg, dt) if cfg.moe
+                    else mlp.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp,
+                                      dt))
+    return block
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 6)
+    p: Params = {"final_norm": jnp.ones((cfg.d_model,), dt)}
+
+    if cfg.frontend == "stub":
+        p["frontend_w"] = dense_init(keys[0], (cfg.frontend_dim,
+                                               cfg.d_model), dtype=dt)
+    if cfg.frontend != "stub" or cfg.family == "vlm":
+        p["embed"] = dense_init(keys[1], (cfg.vocab, cfg.d_model),
+                                dtype=dt)
+    if not cfg.tie_embeddings or "embed" not in p:
+        p["lm_head"] = dense_init(keys[2], (cfg.d_model, cfg.vocab),
+                                  dtype=dt)
+
+    if cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        lkeys = jax.random.split(keys[3], groups * cfg.attn_every)
+        stacked = jax.vmap(lambda k: _init_block(cfg, k))(lkeys)
+        p["layers"] = jax.tree.map(
+            lambda x: x.reshape(groups, cfg.attn_every, *x.shape[1:]),
+            stacked)
+        k4a, k4b = jax.random.split(keys[4])
+        p["shared_attn"] = {
+            "norm": jnp.ones((cfg.d_model,), dt),
+            "attn": attn.init_gqa(k4a, cfg, dt),
+            "norm2": jnp.ones((cfg.d_model,), dt),
+            "mlp": mlp.init_mlp(k4b, cfg.d_model, cfg.d_ff, cfg.mlp, dt)}
+    else:
+        lkeys = jax.random.split(keys[3], cfg.n_layers)
+        p["layers"] = jax.vmap(lambda k: _init_block(cfg, k))(lkeys)
+    return p
+
+
+# ----------------------------------------------------------------- blocks
+def _apply_block(cfg: ModelConfig, lp: Params, h, pos):
+    if cfg.family == "ssm":
+        h = h + rwkv6.rwkv6_timemix_forward(
+            lp["tm"], cfg, rms_norm(h, lp["norm1"], cfg.norm_eps))
+        h = h + rwkv6.rwkv6_chanmix_forward(
+            lp["cm"], cfg, rms_norm(h, lp["norm2"], cfg.norm_eps))
+        return h
+    if cfg.family == "hybrid":
+        return h + mamba2.mamba2_forward(
+            lp["mamba"], cfg, rms_norm(h, lp["norm1"], cfg.norm_eps))
+    a = attn.mla_forward if cfg.mla else attn.gqa_forward
+    h = h + a(lp["attn"], cfg, rms_norm(h, lp["norm1"], cfg.norm_eps), pos)
+    x = rms_norm(h, lp["norm2"], cfg.norm_eps)
+    h = h + (mlp.moe_forward(lp["mlp"], cfg, x) if cfg.moe
+             else mlp.mlp_forward(lp["mlp"], cfg.mlp, x))
+    return h
+
+
+def _embed_inputs(cfg: ModelConfig, params: Params, batch):
+    if cfg.frontend == "stub" and "embeds" in batch:
+        h = batch["embeds"].astype(_dtype(cfg)) @ params["frontend_w"]
+    else:
+        h = params["embed"][batch["tokens"]]
+    b, s = h.shape[:2]
+    if cfg.mrope_sections is not None:
+        pos = batch.get("positions")
+        if pos is None:
+            pos = jnp.broadcast_to(jnp.arange(s)[None, None], (3, b, s))
+    else:
+        pos = batch.get("positions")
+        if pos is None:
+            pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    return h, pos
+
+
+def _lm_head(cfg: ModelConfig, params: Params, h):
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings and "embed" in params:
+        return jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    return h @ params["lm_head"]
+
+
+def forward_train(params: Params, cfg: ModelConfig, batch) -> jax.Array:
+    """batch: {'tokens': (B,S) int32} or {'embeds': (B,S,Fd)} (+positions).
+    Returns logits (B, S, vocab)."""
+    h, pos = _embed_inputs(cfg, params, batch)
+
+    if cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(hh, gp):
+            def mamba_body(hh2, lp):
+                return _apply_block(cfg, lp, hh2, pos), None
+
+            if cfg.remat:
+                mamba_body = jax.checkpoint(mamba_body)
+            hh, _ = jax.lax.scan(mamba_body, hh, gp,
+                                 unroll=cfg.scan_unroll)
+            hh = hh + attn.gqa_forward(
+                shared["attn"], cfg,
+                rms_norm(hh, shared["norm"], cfg.norm_eps), pos)
+            hh = hh + mlp.mlp_forward(
+                shared["mlp"], cfg.mlp,
+                rms_norm(hh, shared["norm2"], cfg.norm_eps))
+            return hh, None
+
+        if cfg.remat:
+            group_body = jax.checkpoint(group_body)
+        h, _ = jax.lax.scan(group_body, h, params["layers"],
+                            unroll=cfg.scan_unroll)
+    else:
+        def body(hh, lp):
+            return _apply_block(cfg, lp, hh, pos), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        h, _ = jax.lax.scan(body, h, params["layers"],
+                            unroll=cfg.scan_unroll)
+    return _lm_head(cfg, params, h)
+
+
+# ----------------------------------------------------------------- caches
+def _block_cache(cfg: ModelConfig, b: int, cache_len: int, dtype):
+    if cfg.family == "ssm":
+        return rwkv6.rwkv6_cache_init(cfg, b, dtype)
+    if cfg.family == "hybrid":
+        return mamba2.mamba2_cache_init(cfg, b, dtype)
+    if cfg.mla:
+        return attn.mla_cache_init(cfg, b, cache_len, dtype)
+    return attn.gqa_cache_init(cfg, b, cache_len, dtype)
+
+
+def init_cache(cfg: ModelConfig, b: int, cache_len: int) -> Params:
+    """Stacked (L, ...) cache pytree (decode scans over the leading axis)."""
+    dt = _dtype(cfg)
+    one = _block_cache(cfg, b, cache_len, dt)
+    if cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        cache = {
+            "blocks": jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[None, None], (groups, cfg.attn_every) + x.shape).copy(),
+                one),
+            "shared": jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None],
+                                           (groups,) + x.shape).copy(),
+                attn.gqa_cache_init(cfg, b, cache_len, dt)),
+        }
+        return cache
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None],
+                                   (cfg.n_layers,) + x.shape).copy(), one)
+
+
+def _decode_block(cfg: ModelConfig, lp, h, pos, cache):
+    if cfg.family == "ssm":
+        o, c1 = rwkv6.rwkv6_timemix_decode(
+            lp["tm"], cfg, rms_norm(h, lp["norm1"], cfg.norm_eps),
+            {"state": cache["state"], "x_tm": cache["x_tm"]})
+        h = h + o
+        o, c2 = rwkv6.rwkv6_chanmix_decode(
+            lp["cm"], cfg, rms_norm(h, lp["norm2"], cfg.norm_eps),
+            {"x_cm": cache["x_cm"]})
+        h = h + o
+        return h, {**c1, **c2}
+    if cfg.family == "hybrid":
+        o, c = mamba2.mamba2_decode(
+            lp["mamba"], cfg, rms_norm(h, lp["norm1"], cfg.norm_eps), pos,
+            cache)
+        return h + o, c
+    dec = attn.mla_decode if cfg.mla else attn.gqa_decode
+    o, c = dec(lp["attn"], cfg, rms_norm(h, lp["norm1"], cfg.norm_eps),
+               pos, cache)
+    h = h + o
+    x = rms_norm(h, lp["norm2"], cfg.norm_eps)
+    h = h + (mlp.moe_forward(lp["mlp"], cfg, x) if cfg.moe
+             else mlp.mlp_forward(lp["mlp"], cfg.mlp, x))
+    return h, c
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache, tokens, pos):
+    """One-token decode.  tokens: (B, 1) int32; pos: (B,) int32.
+    Returns (logits (B, 1, V), new_cache)."""
+    h = params["embed"][tokens]
+
+    if cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(hh, xs):
+            gp, gcache = xs
+
+            def inner(hh2, xs2):
+                lp, lc = xs2
+                hh2, nc = _decode_block(cfg, lp, hh2, pos, lc)
+                return hh2, nc
+
+            hh, new_block_cache = jax.lax.scan(inner, hh,
+                                               (gp, gcache["blocks"]),
+                                               unroll=cfg.scan_unroll)
+            o, nsh = attn.gqa_decode(
+                shared["attn"], cfg,
+                rms_norm(hh, shared["norm"], cfg.norm_eps), pos,
+                gcache["shared"])
+            hh = hh + o
+            hh = hh + mlp.mlp_forward(
+                shared["mlp"], cfg.mlp,
+                rms_norm(hh, shared["norm2"], cfg.norm_eps))
+            return hh, {"blocks": new_block_cache, "shared": nsh}
+
+        h, new_cache = jax.lax.scan(
+            group_body, h,
+            (params["layers"],
+             {"blocks": cache["blocks"], "shared": cache["shared"]}),
+            unroll=cfg.scan_unroll)
+    else:
+        def body(hh, xs):
+            lp, lc = xs
+            hh, nc = _decode_block(cfg, lp, hh, pos, lc)
+            return hh, nc
+
+        h, new_cache = jax.lax.scan(body, h, (params["layers"], cache),
+                                    unroll=cfg.scan_unroll)
+    logits = _lm_head(cfg, params, h)
+    return logits, new_cache
+
+
+def prefill(params: Params, cfg: ModelConfig, batch,
+            cache_len: Optional[int] = None):
+    """Full-sequence forward that also populates the decode cache.
+    ``cache_len``: total cache capacity (must cover prefill + decode tokens
+    for full-attention archs; SWA archs clamp it to the window — the
+    sub-quadratic long-context path).  Returns (last logits (B,1,V), cache).
+    """
+    h, pos = _embed_inputs(cfg, params, batch)
+    b, s = h.shape[:2]
+    dt = _dtype(cfg)
+    cl = cache_len if cache_len is not None else s + 1
+
+    def fill_gqa_cache(lp, hh):
+        c = min(cl, cfg.sliding_window or cl)
+        w = min(s, c)                      # tokens that fit the window
+        q, k, v = attn._qkv(lp["attn"], cfg, hh)
+        del q
+        _, k = attn._rope_qk(cfg, jnp.zeros_like(k), k, pos)
+        kw, vw = k[:, -w:], v[:, -w:]
+        pw = jnp.broadcast_to(jnp.arange(s - w, s)[None], (b, w))
+        slots = pw % c
+        bidx = jnp.arange(b)[:, None]
+        cache = attn.gqa_cache_init(cfg, b, c, dt)
+        return {"k": cache["k"].at[bidx, slots].set(kw),
+                "v": cache["v"].at[bidx, slots].set(vw),
+                "kpos": cache["kpos"].at[bidx, slots].set(pw)}
+
+    if cfg.family == "ssm":
+        def body(hh, lp):
+            nrm = rms_norm(hh, lp["norm1"], cfg.norm_eps)
+            x_tm = nrm[:, -1]
+            # recompute final state by running the scan (returns outputs);
+            # we re-run _timemix capturing the state
+            rkvgw = rwkv6._timemix_streams(
+                lp["tm"], cfg, nrm,
+                jnp.pad(nrm, ((0, 0), (1, 0), (0, 0)))[:, :-1])
+            r, k, v, g, w = rkvgw
+            nh, hd = rwkv6._heads(cfg)
+
+            def stp(st, inp):
+                rt, kt, vt, wt = inp
+                st, out = rwkv6._wkv_step(st, rt, kt, vt, wt, lp["tm"]["u"],
+                                          nh, hd)
+                return st, out
+
+            st0 = jnp.zeros((b, nh, hd, hd), hh.dtype)
+            stN, outs = jax.lax.scan(
+                stp, st0, (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+                           jnp.moveaxis(v, 1, 0),
+                           jnp.moveaxis(w.astype(hh.dtype), 1, 0)))
+            out = jnp.moveaxis(outs, 0, 1).reshape(b, s, cfg.d_model)
+            out = rms_norm(out, lp["tm"]["ln_x"], cfg.norm_eps) * g
+            hh = hh + out @ lp["tm"]["wo"]
+            nrm2 = rms_norm(hh, lp["norm2"], cfg.norm_eps)
+            hh = hh + rwkv6.rwkv6_chanmix_forward(lp["cm"], cfg, nrm2)
+            return hh, {"state": stN, "x_tm": x_tm, "x_cm": nrm2[:, -1]}
+
+        h, cache = jax.lax.scan(body, h, params["layers"],
+                                unroll=cfg.scan_unroll)
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(hh, gp):
+            def inner(hh2, lp):
+                nrm = rms_norm(hh2, lp["norm1"], cfg.norm_eps)
+                z, xbc, dt_raw, d_inner, nheads, n = mamba2._split_proj(
+                    lp["mamba"], cfg, nrm)
+                xbc_conv = jax.nn.silu(mamba2._causal_conv(
+                    xbc, lp["mamba"]["conv_w"], lp["mamba"]["conv_b"]))
+                x, bm, cm = jnp.split(xbc_conv, [d_inner, d_inner + n], -1)
+                dtv = jax.nn.softplus(
+                    dt_raw.astype(jnp.float32)
+                    + lp["mamba"]["dt_bias"][None, None])
+                a = -jnp.exp(lp["mamba"]["a_log"])
+                xh = x.reshape(b, s, nheads, cfg.ssm_head_dim)
+                y, hlast = mamba2._ssd_chunked(
+                    xh * dtv[..., None].astype(xh.dtype), dtv, a, bm, cm,
+                    cfg.ssm_chunk)
+                y = y + lp["mamba"]["d_skip"][None, None, :, None].astype(
+                    y.dtype) * xh
+                y = y.reshape(b, s, d_inner)
+                y = rms_norm(y * jax.nn.silu(z), lp["mamba"]["out_norm"],
+                             cfg.norm_eps)
+                hh2 = hh2 + y @ lp["mamba"]["w_out"]
+                return hh2, {"conv": xbc[:, -(cfg.ssm_conv - 1):],
+                             "ssm": hlast}
+
+            hh, bc = jax.lax.scan(inner, hh, gp, unroll=cfg.scan_unroll)
+            nrm = rms_norm(hh, shared["norm"], cfg.norm_eps)
+            sc = fill_gqa_cache({"attn": shared["attn"]}, nrm)
+            hh = hh + attn.gqa_forward(shared["attn"], cfg, nrm, pos)
+            hh = hh + mlp.mlp_forward(
+                shared["mlp"], cfg.mlp,
+                rms_norm(hh, shared["norm2"], cfg.norm_eps))
+            return hh, {"blocks": bc, "shared": sc}
+
+        h, cache = jax.lax.scan(group_body, h, params["layers"],
+                                unroll=cfg.scan_unroll)
+    else:
+        def body(hh, lp):
+            nrm = rms_norm(hh, lp["norm1"], cfg.norm_eps)
+            a = attn.mla_forward if cfg.mla else attn.gqa_forward
+            if cfg.mla:
+                ckv = rms_norm(nrm @ lp["attn"]["wdkv"],
+                               lp["attn"]["kv_norm"], cfg.norm_eps)
+                kr = attn.apply_rope(
+                    (nrm @ lp["attn"]["wkr"])[:, :, None, :], pos,
+                    cfg.rope_theta)[:, :, 0]
+                kpos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+                base = attn.mla_cache_init(cfg, b, cl, dt)
+                lc = {"ckv": base["ckv"].at[:, :s].set(ckv),
+                      "kr": base["kr"].at[:, :s].set(kr),
+                      "kpos": base["kpos"].at[:, :s].set(kpos)}
+            else:
+                lc = fill_gqa_cache(lp, nrm)
+            hh = hh + a(lp["attn"], cfg, nrm, pos)
+            x = rms_norm(hh, lp["norm2"], cfg.norm_eps)
+            hh = hh + (mlp.moe_forward(lp["mlp"], cfg, x) if cfg.moe
+                       else mlp.mlp_forward(lp["mlp"], cfg.mlp, x))
+            return hh, lc
+
+        h, cache = jax.lax.scan(body, h, params["layers"],
+                                unroll=cfg.scan_unroll)
+
+    logits = _lm_head(cfg, params, h[:, -1:])
+    return logits, cache
+
+
+def count_params(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

@@ -1,0 +1,103 @@
+"""Sharded checkpointing with elastic restore.
+
+Format: one .npz holding every leaf (path-flattened keys) + a JSON manifest
+(step, mesh shape, framework version).  Leaves are gathered to host at save
+and re-placed with the TARGET mesh's shardings at restore — so a checkpoint
+written on a 2x16x16 mesh restores onto 16x16 (pod loss) or onto 8 devices
+(CI), as long as divisibility holds: elastic scaling is a restore-time
+re-shard, not a format concern.
+
+Saves are asynchronous: `save()` snapshots to host (blocking only on device
+transfer) and writes in a daemon thread; call `wait()` (or save again) to
+join — keeps checkpoint I/O off the training critical path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(p) for p in path)
+        out[key] = np.asarray(jax.device_get(leaf))
+    return out, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, state: Any, meta: Optional[dict] = None,
+             blocking: bool = False):
+        self.wait()
+        arrays, _ = _flatten(state)
+        manifest = {"step": int(step), **(meta or {})}
+
+        def _write():
+            tmp = os.path.join(self.dir, f"ckpt_{step}.tmp.npz")
+            dst = os.path.join(self.dir, f"ckpt_{step}.npz")
+            np.savez(tmp, **arrays)
+            os.replace(tmp, dst)
+            with open(os.path.join(self.dir, f"ckpt_{step}.json"),
+                      "w") as f:
+                json.dump(manifest, f)
+            with open(os.path.join(self.dir, "latest.tmp"), "w") as f:
+                f.write(str(step))
+            os.replace(os.path.join(self.dir, "latest.tmp"),
+                       os.path.join(self.dir, "latest"))
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.dir, "latest")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return int(f.read().strip())
+
+    def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
+        """`like`: a pytree (arrays or ShapeDtypeStructs) defining the
+        structure; `shardings`: optional matching tree of NamedShardings for
+        the TARGET mesh (elastic re-shard happens here)."""
+        data = np.load(os.path.join(self.dir, f"ckpt_{step}.npz"))
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        shard_flat = (jax.tree.leaves(shardings)
+                      if shardings is not None else [None] * len(flat))
+        for (path, leaf), shard in zip(flat, shard_flat):
+            key = _SEP.join(str(p) for p in path)
+            arr = data[key]
+            if arr.shape != tuple(leaf.shape):
+                raise ValueError(
+                    f"checkpoint leaf {key} shape {arr.shape} != "
+                    f"expected {leaf.shape}")
+            if shard is not None:
+                leaves.append(jax.device_put(arr, shard))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def manifest(self, step: int) -> dict:
+        with open(os.path.join(self.dir, f"ckpt_{step}.json")) as f:
+            return json.load(f)

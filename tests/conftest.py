@@ -1,0 +1,10 @@
+"""Shared test fixtures.  NOTE: XLA_FLAGS device-count tricks are deliberately
+NOT set here — smoke tests and benches must see the 1 real CPU device; only
+launch/dryrun.py (its own process) forces 512 placeholder devices."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

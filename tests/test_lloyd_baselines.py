@@ -1,0 +1,34 @@
+"""Non-kernel baselines (paper §6 comparison set)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adjusted_rand_index
+from repro.core.lloyd import kmeans_fit, minibatch_kmeans_fit
+from repro.data import blobs
+
+
+def test_lloyd_on_blobs():
+    x, y = blobs(n=1500, d=8, k=5, seed=1)
+    _, assign, hist = kmeans_fit(jnp.asarray(x), 5, jax.random.PRNGKey(0))
+    assert adjusted_rand_index(y, np.asarray(assign)) > 0.7
+    objs = [h["objective"] for h in hist]
+    assert all(b <= a + 1e-6 for a, b in zip(objs, objs[1:]))
+
+
+@pytest.mark.parametrize("rate", ["beta", "sklearn"])
+def test_minibatch_kmeans_rates(rate):
+    x, y = blobs(n=2000, d=8, k=5, seed=2)
+    _, assign, hist = minibatch_kmeans_fit(
+        jnp.asarray(x), 5, jax.random.PRNGKey(0), batch_size=256,
+        rate=rate, max_iters=60)
+    assert adjusted_rand_index(y, np.asarray(assign)) > 0.6
+
+
+def test_minibatch_kmeans_early_stop():
+    x, _ = blobs(n=2000, d=8, k=5, seed=2)
+    _, _, hist = minibatch_kmeans_fit(
+        jnp.asarray(x), 5, jax.random.PRNGKey(0), batch_size=512,
+        rate="beta", max_iters=200, epsilon=1e-3, early_stop=True)
+    assert len(hist) < 200

@@ -1,0 +1,45 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import adjusted_rand_index, normalized_mutual_info
+
+
+def test_perfect_match():
+    y = np.array([0, 0, 1, 1, 2, 2])
+    assert adjusted_rand_index(y, y) == pytest.approx(1.0)
+    assert normalized_mutual_info(y, y) == pytest.approx(1.0)
+
+
+def test_permutation_invariant():
+    y = np.array([0, 0, 1, 1, 2, 2])
+    p = np.array([2, 2, 0, 0, 1, 1])  # same clustering, relabeled
+    assert adjusted_rand_index(y, p) == pytest.approx(1.0)
+    assert normalized_mutual_info(y, p) == pytest.approx(1.0)
+
+
+def test_known_ari_value():
+    # hand-checked example (matches sklearn.adjusted_rand_score)
+    a = np.array([0, 0, 1, 1])
+    b = np.array([0, 0, 1, 2])
+    assert adjusted_rand_index(a, b) == pytest.approx(0.5714285714, rel=1e-6)
+
+
+def test_random_labels_near_zero():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 5, 5000)
+    b = rng.integers(0, 5, 5000)
+    assert abs(adjusted_rand_index(a, b)) < 0.02
+    assert normalized_mutual_info(a, b) < 0.02
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.integers(10, 200), st.integers(0, 2 ** 16))
+def test_ari_bounds_property(k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, k, n)
+    b = rng.integers(0, k, n)
+    ari = adjusted_rand_index(a, b)
+    nmi = normalized_mutual_info(a, b)
+    assert -1.0 <= ari <= 1.0
+    assert 0.0 <= nmi <= 1.0 + 1e-9

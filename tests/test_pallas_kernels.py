@@ -1,0 +1,165 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis property tests,
+all in interpret mode (executes the real tiling/accumulation logic on CPU)
+against the ref.py pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kernel_fns import Gaussian, Linear, Polynomial
+from repro.kernels import ref
+from repro.kernels.fused_assign import fused_batch_center_dots_pallas
+from repro.kernels.kernel_matmul import kernel_matmul_pallas
+from repro.kernels import ops
+
+KERNELS = {
+    "gaussian": (Gaussian(kappa=jnp.float32(1.3)),
+                 dict(kind="gaussian", p0=1.3)),
+    "linear": (Linear(), dict(kind="linear")),
+    "polynomial": (Polynomial(bias=jnp.float32(1.0), scale=jnp.float32(2.0),
+                              degree=2),
+                   dict(kind="polynomial", p0=1.0, p1=2.0, p2=2)),
+}
+
+
+def _rand(shape, seed, dtype=jnp.float32):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape), dtype)
+
+
+# --------------------------------------------------------- fused_assign
+@pytest.mark.parametrize("kname", list(KERNELS))
+@pytest.mark.parametrize("b,k,w,d", [
+    (8, 3, 16, 4),      # tiny, everything unaligned
+    (128, 4, 32, 8),    # b aligned, w tile-multiple
+    (100, 2, 50, 130),  # d > tile, all unaligned
+    (32, 16, 8, 64),    # many centers
+])
+def test_fused_assign_shapes(kname, b, k, w, d):
+    kern, kw = KERNELS[kname]
+    xb = _rand((b, d), 0)
+    sup = _rand((k, w, d), 1)
+    coef = jnp.abs(_rand((k, w), 2)) / w
+    got = fused_batch_center_dots_pallas(xb, sup, coef, bt=16, st=16,
+                                         interpret=True, **kw)
+    want = ref.batch_center_dots(kern, xb, sup, coef)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_assign_dtypes(dtype):
+    kern, kw = KERNELS["gaussian"]
+    xb = _rand((24, 16), 0, dtype)
+    sup = _rand((3, 20, 16), 1, dtype)
+    coef = (jnp.abs(_rand((3, 20), 2)) / 20).astype(dtype)
+    got = fused_batch_center_dots_pallas(xb, sup, coef, bt=8, st=8,
+                                         interpret=True, **kw)
+    want = ref.batch_center_dots(
+        kern, xb.astype(jnp.float32), sup.astype(jnp.float32),
+        coef.astype(jnp.float32))
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 5), st.integers(1, 40),
+       st.integers(1, 20), st.integers(0, 2 ** 16))
+def test_fused_assign_property(b, k, w, d, seed):
+    kern, kw = KERNELS["gaussian"]
+    xb = _rand((b, d), seed)
+    sup = _rand((k, w, d), seed + 1)
+    coef = jnp.abs(_rand((k, w), seed + 2)) / w
+    got = fused_batch_center_dots_pallas(xb, sup, coef, bt=8, st=8,
+                                         interpret=True, **kw)
+    want = ref.batch_center_dots(kern, xb, sup, coef)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_fused_assign_zero_coef_padding_invariance():
+    """Empty window slots (coef 0) contribute exactly nothing."""
+    kern, kw = KERNELS["gaussian"]
+    xb = _rand((16, 8), 0)
+    sup = _rand((2, 12, 8), 1)
+    coef = jnp.abs(_rand((2, 12), 2))
+    coef = coef.at[:, 6:].set(0.0)
+    sup_junk = sup.at[:, 6:, :].set(1e3)  # junk points behind zero coefs
+    a = fused_batch_center_dots_pallas(xb, sup, coef, bt=8, st=8,
+                                       interpret=True, **kw)
+    bq = fused_batch_center_dots_pallas(xb, sup_junk, coef, bt=8, st=8,
+                                        interpret=True, **kw)
+    np.testing.assert_allclose(a, bq, rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------- kernel_matmul
+@pytest.mark.parametrize("kname", list(KERNELS))
+@pytest.mark.parametrize("n,m,c,d", [
+    (16, 16, 2, 4),
+    (100, 64, 5, 16),
+    (33, 70, 10, 130),
+    (128, 128, 1, 32),
+])
+def test_kernel_matmul_shapes(kname, n, m, c, d):
+    kern, kw = KERNELS[kname]
+    x = _rand((n, d), 0)
+    y = _rand((m, d), 1)
+    v = _rand((m, c), 2)
+    got = kernel_matmul_pallas(x, y, v, nt=16, mt=16, interpret=True, **kw)
+    want = ref.kernel_matmul(kern, x, y, v)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 50), st.integers(1, 50), st.integers(1, 8),
+       st.integers(1, 20), st.integers(0, 2 ** 16))
+def test_kernel_matmul_property(n, m, c, d, seed):
+    kern, kw = KERNELS["gaussian"]
+    x = _rand((n, d), seed)
+    y = _rand((m, d), seed + 1)
+    v = _rand((m, c), seed + 2)
+    got = kernel_matmul_pallas(x, y, v, nt=8, mt=8, interpret=True, **kw)
+    want = ref.kernel_matmul(kern, x, y, v)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+# --------------------------------------------------------- ops dispatch
+def test_ops_dispatch_matches_core_path():
+    """ops.fused_batch_center_dots == the einsum inside minibatch.make_step."""
+    from repro.core.minibatch import _batch_center_dots
+    kern = Gaussian(kappa=jnp.float32(0.9))
+    x = _rand((200, 8), 3)
+    idx = jnp.asarray(np.random.default_rng(0).integers(0, 200, (4, 24)),
+                      jnp.int32)
+    coef = jnp.abs(_rand((4, 24), 4)) / 24
+    xb = x[:32]
+    want = _batch_center_dots(kern, xb, x, idx, coef, use_pallas=False)
+    got = ops.fused_batch_center_dots(kern, xb, x[idx.reshape(-1)], coef,
+                                      bt=16, st=16, interpret=True)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_minibatch_step_with_pallas_matches_xla():
+    """End-to-end: Algorithm 2 step with use_pallas=True == XLA path."""
+    from repro.core import MBConfig, make_step, init_state, window_size
+    from repro.core.minibatch import sample_batch
+    from repro.data import blobs
+    x, _ = blobs(n=512, d=16, k=4, seed=0)
+    x = jnp.asarray(x)
+    kern = Gaussian(kappa=jnp.float32(2.0))
+    cfg_x = MBConfig(k=4, batch_size=64, tau=32, max_iters=5, epsilon=-1.0)
+    cfg_p = cfg_x._replace(use_pallas=True)
+    init_idx = jnp.array([0, 100, 200, 300], jnp.int32)
+    w = window_size(cfg_x.batch_size, cfg_x.tau)
+    s_x = init_state(x, init_idx, kern, w)
+    s_p = init_state(x, init_idx, kern, w)
+    step_x = jax.jit(make_step(kern, cfg_x))
+    step_p = jax.jit(make_step(kern, cfg_p))
+    key = jax.random.PRNGKey(0)
+    for i in range(3):
+        key, kb = jax.random.split(key)
+        bidx = sample_batch(kb, 512, 64)
+        s_x, i_x = step_x(s_x, x, bidx)
+        s_p, i_p = step_p(s_p, x, bidx)
+        assert float(i_x.f_before) == pytest.approx(float(i_p.f_before),
+                                                    abs=1e-5)
+    np.testing.assert_allclose(s_x.sqnorm, s_p.sqnorm, atol=1e-5)

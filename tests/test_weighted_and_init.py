@@ -1,0 +1,58 @@
+"""Weighted points (paper footnote 1) + subsampled k-means++ coverage."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Gaussian, MBConfig, adjusted_rand_index, fit, predict
+from repro.core.init import kmeans_plus_plus_subsampled
+from repro.core.minibatch import sample_batch_weighted
+from repro.data import blobs
+
+GAUSS = Gaussian(kappa=jnp.float32(1.0))
+
+
+def test_weighted_sampling_follows_weights():
+    probs = jnp.asarray([0.7, 0.1, 0.1, 0.1])
+    idx = sample_batch_weighted(jax.random.PRNGKey(0), probs, 4000)
+    frac0 = float(jnp.mean((idx == 0).astype(jnp.float32)))
+    assert abs(frac0 - 0.7) < 0.05
+
+
+def test_weighted_fit_prioritizes_heavy_region():
+    """Two far blobs, k=1: with weight ~100x on blob B, the single center
+    must land in B (the weighted objective says so)."""
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(300, 4)).astype(np.float32) * 0.1
+    b = (rng.normal(size=(300, 4)) * 0.1 + 5.0).astype(np.float32)
+    x = jnp.asarray(np.concatenate([a, b]))
+    w = np.ones(600, np.float32)
+    w[300:] = 100.0
+    cfg = MBConfig(k=1, batch_size=64, tau=64, max_iters=30, epsilon=-1.0)
+    state, _ = fit(x, GAUSS, cfg, jax.random.PRNGKey(1),
+                   weights=jnp.asarray(w), init="random")
+    # center support must be dominated by points from blob B (idx >= 300)
+    sup = np.asarray(state.idx[0])
+    coef = np.asarray(state.coef[0])
+    heavy_mass = coef[sup >= 300].sum() / max(coef.sum(), 1e-9)
+    assert heavy_mass > 0.9
+
+
+def test_weighted_uniform_equals_quality_of_unweighted():
+    x, y = blobs(n=1200, d=8, k=4, seed=0)
+    x = jnp.asarray(x)
+    cfg = MBConfig(k=4, batch_size=128, tau=128, max_iters=40,
+                   epsilon=-1.0)
+    sw, _ = fit(x, GAUSS, cfg, jax.random.PRNGKey(2),
+                weights=jnp.ones((1200,)))
+    ari = adjusted_rand_index(y, np.asarray(predict(sw, x, x, GAUSS)))
+    assert ari > 0.5
+
+
+def test_kmeanspp_subsampled():
+    x, _ = blobs(n=2000, d=8, k=6, seed=1)
+    x = jnp.asarray(x)
+    idx = kmeans_plus_plus_subsampled(jax.random.PRNGKey(0), x, 6, GAUSS,
+                                      m=256)
+    assert idx.shape == (6,)
+    assert len(set(np.asarray(idx).tolist())) == 6
+    assert int(jnp.max(idx)) < 2000
