@@ -2,6 +2,9 @@
 
 Public API:
     MBConfig, fit, fit_jit, predict          — Algorithm 2 (truncated)
+    MultiRestartEngine, fit_restarts         — best-of-R engine (engine.py)
+    distributed.{make_dist_step, fit_distributed_jit, predict_distributed}
+                                             — shard_map multi-device path
     untruncated.fit                          — Algorithm 1 (DP)
     fullbatch.fit                            — full-batch baseline
     kernel_fns.{Gaussian,Laplacian,...}      — kernel functions
@@ -13,7 +16,11 @@ from repro.core.kernel_fns import (  # noqa: F401
     gamma_of, kernel_cross, kernel_diag, median_sq_dist_heuristic,
 )
 from repro.core.minibatch import (  # noqa: F401
-    MBConfig, StepInfo, fit, fit_jit, make_step, predict, sample_batch,
+    MBConfig, StepInfo, batch_objective, fit, fit_jit, make_step, predict,
+    sample_batch,
+)
+from repro.core.engine import (  # noqa: F401
+    EngineResult, MultiRestartEngine, fit_restarts,
 )
 from repro.core.state import CenterState, init_state, window_size  # noqa: F401
 from repro.core.metrics import (  # noqa: F401

@@ -1,0 +1,54 @@
+"""Version shims for JAX APIs that moved between releases.
+
+The repo targets a range of JAX versions:
+
+* ``shard_map`` lives at ``jax.experimental.shard_map.shard_map`` up to
+  ~0.4.x, is promoted to ``jax.shard_map`` later, and along the way the
+  replication-checking kwarg was renamed ``check_rep`` -> ``check_vma``.
+  ``compat.shard_map`` accepts either spelling and forwards whichever one
+  the installed JAX understands.
+
+Import this module — never ``jax.shard_map`` directly — everywhere a
+sharded program is built (core/distributed.py, core/engine.py,
+launch/*).
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable
+
+import jax
+
+
+def _resolve_shard_map() -> Callable[..., Any]:
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map as fn  # noqa: F811
+    return fn
+
+
+_SHARD_MAP = _resolve_shard_map()
+# The replication-check kwarg name understood by the installed JAX
+# (None if the installed signature has neither — then we drop the flag).
+_CHECK_KW = next(
+    (kw for kw in ("check_vma", "check_rep")
+     if kw in inspect.signature(_SHARD_MAP).parameters),
+    None)
+
+
+def shard_map(f: Callable[..., Any], *, mesh, in_specs, out_specs,
+              check_vma: bool | None = None,
+              check_rep: bool | None = None) -> Callable[..., Any]:
+    """Drop-in for ``jax.shard_map`` that runs on old and new JAX.
+
+    ``check_vma`` and ``check_rep`` are aliases; pass at most one.
+    """
+    if check_vma is not None and check_rep is not None:
+        raise TypeError("pass at most one of check_vma / check_rep")
+    flag = check_vma if check_vma is not None else check_rep
+    kwargs = {}
+    if flag is not None and _CHECK_KW is not None:
+        kwargs[_CHECK_KW] = flag
+    return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

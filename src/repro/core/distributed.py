@@ -10,6 +10,9 @@ Sharding layout (see DESIGN.md §4):
   ``cluster_hidden_states``.)
 * **The batch is sharded over ('pod', 'data')** — assignment distances are
   computed on local batch rows against local centers.
+* **The dataset itself is sharded over the data axes** in the fully
+  on-device path (``fit_distributed_jit``): each data shard samples its
+  slice of the batch locally, so no host ever materializes the batch.
 
 Collectives per iteration (the roofline collective term):
   1. all_gather over 'model'  of P_partial (b_loc, k_loc)  -> (b_loc, k)
@@ -19,20 +22,23 @@ Collectives per iteration (the roofline collective term):
 
 The step is paper-faithful (Algorithm 2 semantics identical to
 repro.core.minibatch); tests assert bit-comparable trajectories against the
-single-device implementation on a CPU mesh.
+single-device implementation on a CPU mesh.  ``shard_map`` itself comes
+from :mod:`repro.core.compat` — the alias moved across JAX releases.
 """
 from __future__ import annotations
 
-import functools
+import math
 from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.compat import shard_map
 from repro.core.kernel_fns import KernelFn, kernel_cross, kernel_diag
 from repro.core.minibatch import MBConfig
 from repro.core.rates import get_rate
+from repro.core.state import CenterState
 
 
 class DistState(NamedTuple):
@@ -78,11 +84,48 @@ def state_shardings(mesh: Mesh, model_axis: str = "model"):
         step=NamedSharding(mesh, P()))
 
 
-def make_dist_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
-                   data_axes: Sequence[str] = ("data",),
-                   model_axis: str = "model"):
-    """Returns step(state, xb) -> (state, info), a shard_map'd Algorithm-2
-    iteration.  xb: (b, d) batch sharded over data_axes on rows."""
+def shard_dataset(x: jax.Array, mesh: Mesh,
+                  data_axes: Sequence[str] = ("data",)) -> jax.Array:
+    """Place the dataset row-sharded over the data axes (replicated over
+    'model').  Rows must divide evenly over the data shards — do NOT pad
+    with synthetic rows: the on-device sampler (make_dist_sampling_step)
+    draws uniformly from each local slice, so pad rows would silently enter
+    training batches.  Subsample to a divisible n instead."""
+    n_shards = _data_shard_count(mesh, data_axes)
+    if x.shape[0] % n_shards:
+        raise ValueError(
+            f"dataset rows {x.shape[0]} must divide over {n_shards} data "
+            f"shards (drop {x.shape[0] % n_shards} rows; padding would "
+            "leak synthetic points into sampled batches)")
+    return jax.device_put(x, NamedSharding(mesh, P(tuple(data_axes), None)))
+
+
+def _data_shard_count(mesh: Mesh, data_axes: Sequence[str]) -> int:
+    return int(math.prod(mesh.shape[a] for a in data_axes))
+
+
+def _replica_index(mesh: Mesh, data_axes: Sequence[str]) -> jax.Array:
+    """Flat index of this device among the data replicas (row-major over
+    data_axes) — must stay the single source of truth so shard-local batch
+    sampling and sharded Gram-row ownership agree."""
+    ridx = jnp.zeros((), jnp.int32)
+    for ax in data_axes:
+        ridx = ridx * mesh.shape[ax] + jax.lax.axis_index(ax)
+    return ridx
+
+
+def _make_local_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
+                     data_axes: Sequence[str], model_axis: str):
+    """The per-device Algorithm-2 iteration body (runs inside shard_map)."""
+    if cfg.sqnorm_mode == "recompute_sharded":
+        from repro.core.state import window_size
+        w = window_size(cfg.batch_size, cfg.tau)
+        r = _data_shard_count(mesh, data_axes)
+        if w % r:
+            raise ValueError(
+                f"sqnorm_mode='recompute_sharded' needs window W={w} "
+                f"divisible by the {r} data shards (else Gram rows "
+                f"{w - w % r}..{w - 1} would be computed by no shard)")
     rate_fn = get_rate(cfg.rate)
     b = cfg.batch_size
     data_axes = tuple(data_axes)
@@ -94,20 +137,31 @@ def make_dist_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
         and accumulations stay f32)."""
         return x.astype(cdt) if cdt is not None else x
 
+    def p_of(pts, coef, xb_loc):
+        """P[i,j] = <phi(xb_loc[i]), C_j> over this shard's centers.
+
+        With ``cfg.use_pallas`` the fused Pallas kernel runs on the
+        per-shard support tile (k_loc, W, d) — each device streams only its
+        own centers' windows through VMEM, so tiles shrink with the model
+        axis and never touch remote support points."""
+        k_loc, w, d = pts.shape
+        if cfg.use_pallas:
+            from repro.kernels import ops as kops
+            return kops.fused_batch_center_dots(
+                kernel, _c(xb_loc), _c(pts.reshape(k_loc * w, d)), coef)
+        cross = kernel_cross(kernel, _c(xb_loc), _c(pts.reshape(k_loc * w, d)))
+        return jnp.einsum("bkw,kw->bk",
+                          cross.reshape(xb_loc.shape[0], k_loc, w)
+                          .astype(jnp.float32), coef)
+
     def local_step(state: DistState, xb_loc: jax.Array):
         k_loc, w, d = state.pts.shape
         m_idx = jax.lax.axis_index(model_axis)
-        k_total = k_loc * jax.lax.axis_size(model_axis)
         center_gid0 = m_idx * k_loc  # first global center id on this device
 
         # ---- assignment: local batch rows x local centers ------------------
         diag_b = kernel_diag(kernel, xb_loc).astype(jnp.float32)   # (b_loc,)
-        cross = kernel_cross(kernel, _c(xb_loc),
-                             _c(state.pts.reshape(k_loc * w, d)))
-        p_loc = jnp.einsum("bkw,kw->bk",
-                           cross.reshape(xb_loc.shape[0], k_loc, w)
-                           .astype(jnp.float32),
-                           state.coef)                             # (b_loc,k_loc)
+        p_loc = p_of(state.pts, state.coef, xb_loc)                # (b_loc,k_loc)
         d_loc = diag_b[:, None] - 2.0 * p_loc + state.sqnorm[None, :]
         d_all = jax.lax.all_gather(d_loc, model_axis, axis=1, tiled=True)
         f_before = jnp.mean(jnp.min(d_all, axis=1))
@@ -148,11 +202,8 @@ def make_dist_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
             # center's full W x W Gram on EVERY data-row replica — R-fold
             # redundant.  Here each data row computes W/R Gram rows and the
             # quadratic form is psum'd: per-device flops drop by R.
-            r_total = 1
-            ridx = jnp.zeros((), jnp.int32)
-            for ax in data_axes:
-                ridx = ridx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
-                r_total *= jax.lax.axis_size(ax)
+            r_total = _data_shard_count(mesh, data_axes)
+            ridx = _replica_index(mesh, data_axes)
             rows = w // r_total
 
             def sq_one(pts_row, coef_row):
@@ -176,11 +227,7 @@ def make_dist_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
             new_sqnorm = jax.vmap(sq_one)(new_pts, new_coef)
 
         # ---- batch objective on new centers (early stopping) ---------------
-        cross2 = kernel_cross(kernel, _c(xb_loc),
-                              _c(new_pts.reshape(k_loc * w, d)))
-        p2 = jnp.einsum("bkw,kw->bk",
-                        cross2.reshape(xb_loc.shape[0], k_loc, w)
-                        .astype(jnp.float32), new_coef)
+        p2 = p_of(new_pts, new_coef, xb_loc)
         d2 = diag_b[:, None] - 2.0 * p2 + new_sqnorm[None, :]
         d2_min = jax.lax.pmin(jnp.min(d2, axis=1), model_axis)     # (b_loc,)
         f_after = jnp.mean(d2_min)
@@ -190,23 +237,65 @@ def make_dist_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
         new_state = DistState(pts=new_pts, coef=new_coef, head=new_head,
                               sqnorm=new_sqnorm, counts=state.counts + bj,
                               step=state.step + 1)
-        del k_total
         return new_state, DistInfo(f_before, f_after, f_before - f_after, bj)
 
-    dspec = P(tuple(data_axes))
-    state_specs = DistState(
+    return local_step
+
+
+def _state_specs(model_axis: str):
+    return DistState(
         pts=P(model_axis, None, None), coef=P(model_axis, None),
         head=P(model_axis), sqnorm=P(model_axis), counts=P(model_axis),
         step=P())
+
+
+def make_dist_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
+                   data_axes: Sequence[str] = ("data",),
+                   model_axis: str = "model"):
+    """Returns step(state, xb) -> (state, info), a shard_map'd Algorithm-2
+    iteration.  xb: (b, d) batch sharded over data_axes on rows."""
+    data_axes = tuple(data_axes)
+    local_step = _make_local_step(kernel, cfg, mesh, data_axes, model_axis)
+    state_specs = _state_specs(model_axis)
     info_specs = DistInfo(P(), P(), P(), P(model_axis))
 
-    step = jax.shard_map(
+    return shard_map(
         local_step, mesh=mesh,
-        in_specs=(state_specs, P(tuple(data_axes), None)),
+        in_specs=(state_specs, P(data_axes, None)),
         out_specs=(state_specs, info_specs),
-        check_vma=False)
-    del dspec
-    return step
+        check_rep=False)
+
+
+def make_dist_sampling_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
+                            data_axes: Sequence[str] = ("data",),
+                            model_axis: str = "model"):
+    """Returns step(state, x, key) -> (state, info) where x is the FULL
+    dataset row-sharded over the data axes and the batch is sampled
+    on-device: each data shard draws b / n_shards rows uniformly from its
+    local slice (stratified-uniform over equal shards — same marginal as
+    the paper's uniform-with-replacement model)."""
+    data_axes = tuple(data_axes)
+    n_shards = _data_shard_count(mesh, data_axes)
+    if cfg.batch_size % n_shards:
+        raise ValueError(f"batch_size {cfg.batch_size} must divide over "
+                         f"{n_shards} data shards")
+    b_loc = cfg.batch_size // n_shards
+    local_step = _make_local_step(kernel, cfg, mesh, data_axes, model_axis)
+
+    def sampled(state: DistState, x_loc: jax.Array, key: jax.Array):
+        kb = jax.random.fold_in(key, _replica_index(mesh, data_axes))
+        bidx = jax.random.randint(kb, (b_loc,), 0, x_loc.shape[0],
+                                  dtype=jnp.int32)
+        return local_step(state, x_loc[bidx])
+
+    state_specs = _state_specs(model_axis)
+    info_specs = DistInfo(P(), P(), P(), P(model_axis))
+
+    return shard_map(
+        sampled, mesh=mesh,
+        in_specs=(state_specs, P(data_axes, None), P()),
+        out_specs=(state_specs, info_specs),
+        check_rep=False)
 
 
 def fit_distributed(xb_stream, center_pts: jax.Array, kernel: KernelFn,
@@ -237,6 +326,103 @@ def fit_distributed(xb_stream, center_pts: jax.Array, kernel: KernelFn,
         if early_stop and imp < cfg.epsilon:
             break
     return state, history
+
+
+def fit_distributed_jit(x: jax.Array, center_pts: jax.Array,
+                        kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
+                        key: jax.Array,
+                        data_axes: Sequence[str] = ("data",),
+                        model_axis: str = "model"):
+    """Fully on-device distributed fit: the dataset stays sharded across the
+    mesh, batches are sampled shard-locally, and the whole early-stopped loop
+    is ONE compiled program — zero per-step host sync (the production path).
+
+    Returns (state, iters) like :func:`repro.core.minibatch.fit_jit`."""
+    from repro.core.state import window_size
+
+    w = window_size(cfg.batch_size, cfg.tau)
+    state0 = jax.device_put(init_dist_state(center_pts, kernel, w),
+                            state_shardings(mesh, model_axis))
+    xs = shard_dataset(x, mesh, data_axes)
+    step = make_dist_sampling_step(kernel, cfg, mesh, data_axes, model_axis)
+
+    from repro.core.minibatch import run_early_stopped
+
+    @jax.jit
+    def run(state, x, key):
+        def step_with_key(state, kb):
+            state, info = step(state, x, kb)
+            return state, info.improvement
+
+        return run_early_stopped(cfg, step_with_key, state, key)
+
+    return run(state0, xs, key)
+
+
+def dist_to_center_state(dst: DistState) -> CenterState:
+    """View a coordinate-window DistState as an index-free CenterState-like
+    tuple for serving: ``idx`` is a placeholder arange since predict paths
+    below consume coordinates directly."""
+    k, w, _ = dst.pts.shape
+    return CenterState(idx=jnp.arange(k * w, dtype=jnp.int32).reshape(k, w),
+                       coef=dst.coef, head=dst.head, sqnorm=dst.sqnorm,
+                       counts=dst.counts, step=dst.step)
+
+
+# Compiled serving programs, keyed by everything baked into the closure;
+# array shapes/dtypes are handled by each cached function's own jit cache.
+_PREDICT_FNS: dict = {}
+
+
+def _predict_fn(mesh: Mesh, data_axes, treedef, loc_chunk: int):
+    key = (mesh, data_axes, treedef, loc_chunk)
+    fn = _PREDICT_FNS.get(key)
+    if fn is None:
+        from repro.core.minibatch import assign_chunked
+
+        def local_predict(kern_leaves, coef, sqnorm, sup, xq_loc):
+            kern = jax.tree_util.tree_unflatten(treedef, kern_leaves)
+            return assign_chunked(kern, coef, sqnorm, sup, xq_loc,
+                                  loc_chunk)
+
+        fn = jax.jit(shard_map(
+            local_predict, mesh=mesh,
+            in_specs=([P()] * treedef.num_leaves, P(), P(), P(),
+                      P(data_axes, None)),
+            out_specs=P(data_axes),
+            check_rep=False))
+        _PREDICT_FNS[key] = fn
+    return fn
+
+
+def predict_distributed(state: CenterState, x: jax.Array, xq: jax.Array,
+                        kernel: KernelFn, mesh: Mesh,
+                        data_axes: Optional[Sequence[str]] = None,
+                        chunk: int = 4096) -> jax.Array:
+    """Sharded serving variant of :func:`repro.core.minibatch.predict`:
+    query rows are sharded over the mesh's data axes, support windows are
+    replicated, and each device classifies its rows with zero collectives
+    (the chunked kernel itself is ``minibatch.assign_chunked``, shared with
+    the single-device path).  Handles arbitrary (non-divisible) query
+    counts by padding.  The compiled program is cached per
+    (mesh, axes, kernel structure, chunk) so repeated serving calls don't
+    re-trace."""
+    if data_axes is None:
+        data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    data_axes = tuple(data_axes)
+    n_shards = _data_shard_count(mesh, data_axes)
+    nq = xq.shape[0]
+    pad = (-nq) % n_shards
+    xq_p = jnp.pad(xq, ((0, pad),) + ((0, 0),) * (xq.ndim - 1))
+
+    sup = x[state.idx.reshape(-1)]                   # (k*W, d) replicated
+    loc_chunk = min(chunk, max(xq_p.shape[0] // n_shards, 1))
+
+    leaves, treedef = jax.tree_util.tree_flatten(kernel)
+    fn = _predict_fn(mesh, data_axes, treedef, loc_chunk)
+    xq_sh = jax.device_put(xq_p, NamedSharding(mesh, P(data_axes, None)))
+    out = fn(leaves, state.coef, state.sqnorm, sup, xq_sh)
+    return out[:nq]
 
 
 def cluster_hidden_states(activations_iter, k: int, kernel: KernelFn,

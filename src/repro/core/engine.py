@@ -1,0 +1,192 @@
+"""Multi-restart clustering engine.
+
+Mini-batch (kernel) k-means is a stochastic descent: Tang & Monteleoni's
+analysis (and sklearn practice) motivates running R independent restarts
+and keeping the best.  Naively that multiplies wall-clock by R; here the
+R restarts become ONE compiled program:
+
+* ``fit_restarts`` vmaps the fully-on-device ``fit_jit`` loop (init ->
+  while_loop -> early stop) over R PRNG keys and R init index sets.  The
+  vmapped ``lax.while_loop`` keeps stepping until every restart has
+  terminated (finished lanes are masked), so early-stopping still works
+  per-restart.
+* Every restart's final centers are scored on one SHARED eval batch
+  (``batch_objective``) and the argmin state is selected on-device — the
+  host only ever sees the winner.
+* With a ``mesh`` the restart axis is sharded across devices: R restarts
+  x D devices run in a single compiled program, XLA partitioning the
+  batched kernel evaluations over the 'restart' axis.  On top of a
+  multi-axis mesh the same engine serves sharded prediction via
+  ``repro.core.distributed.predict_distributed``.
+
+``MultiRestartEngine`` is the stateful convenience wrapper (caches the
+compiled program across fits of same-shaped data).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import init as init_lib
+from repro.core.kernel_fns import KernelFn
+from repro.core.minibatch import (
+    MBConfig, batch_objective, make_step, run_early_stopped, sample_batch,
+    sampled_step_with_key,
+)
+from repro.core.state import CenterState, init_state, window_size
+
+
+class EngineResult(NamedTuple):
+    state: CenterState       # best restart's centers
+    objective: jax.Array     # ()  best shared-eval-batch objective
+    objectives: jax.Array    # (R,) per-restart eval objectives
+    iters: jax.Array         # (R,) iterations each restart ran
+    best: jax.Array          # ()  int32 winning restart index
+
+
+def _restart_axis_of(mesh: Mesh, restart_axis: Optional[str]) -> str:
+    if restart_axis is not None:
+        return restart_axis
+    return mesh.axis_names[0]
+
+
+def make_init_run(kernel: KernelFn, cfg: MBConfig, init: str = "kmeans++"):
+    """Jitted, vmapped per-restart init draw: (ikeys (R, 2), x) -> (R, k)
+    center indices.  Cache alongside make_restart_run's program (as
+    MultiRestartEngine does) so repeated fits pay no re-trace."""
+    if init == "kmeans++":
+        def one(kk, x):
+            return init_lib.kmeans_plus_plus(kk, x, cfg.k, kernel)
+    elif init == "random":
+        def one(kk, x):
+            return init_lib.random_init(kk, x.shape[0], cfg.k)
+    else:
+        raise ValueError(init)
+    return jax.jit(jax.vmap(one, in_axes=(0, None)))
+
+
+def fit_restarts(x: jax.Array, kernel: KernelFn, cfg: MBConfig,
+                 key: jax.Array, restarts: int,
+                 init: str = "kmeans++",
+                 init_idx: Optional[jax.Array] = None,
+                 mesh: Optional[Mesh] = None,
+                 restart_axis: Optional[str] = None,
+                 eval_batch_size: Optional[int] = None,
+                 _run=None, _init_run=None) -> EngineResult:
+    """Run R independent mini-batch kernel k-means fits in one compiled
+    program and return the best (plus per-restart diagnostics).
+
+    ``init_idx``: optional (R, k) precomputed initial center indices —
+    otherwise R independent k-means++ (or random) draws are made, vmapped
+    on-device.  With ``mesh``, R must be divisible by the restart-axis size
+    (see ``launch.mesh.make_restart_mesh``).
+    """
+    n = x.shape[0]
+    k_init, k_fit, k_eval = jax.random.split(key, 3)
+    if init_idx is None:
+        ikeys = jax.random.split(k_init, restarts)
+        draw = _init_run if _init_run is not None \
+            else make_init_run(kernel, cfg, init)
+        init_idx = draw(ikeys, x)
+    if init_idx.shape[0] != restarts:
+        raise ValueError(f"init_idx has {init_idx.shape[0]} rows, "
+                         f"expected {restarts}")
+    fit_keys = jax.random.split(k_fit, restarts)
+    eb = eval_batch_size or min(4 * cfg.batch_size, n)
+    eval_idx = sample_batch(k_eval, n, eb)
+
+    if mesh is not None:
+        from repro.launch.sharding import restart_placements
+        ax = _restart_axis_of(mesh, restart_axis)
+        if restarts % mesh.shape[ax]:
+            raise ValueError(
+                f"restarts={restarts} not divisible by mesh axis "
+                f"'{ax}' of size {mesh.shape[ax]}")
+        (fit_keys, init_idx), (x, eval_idx) = restart_placements(
+            mesh, ax, (fit_keys, init_idx), (x, eval_idx))
+
+    run = _run if _run is not None else make_restart_run(kernel, cfg)
+    return run(x, fit_keys, init_idx, eval_idx)
+
+
+def make_restart_run(kernel: KernelFn, cfg: MBConfig):
+    """Build the jitted R-restart program: (x, fit_keys(R,2), init_idx(R,k),
+    eval_idx(eb,)) -> EngineResult.  Kernel params are closed over (they are
+    array pytrees, so they cannot be static jit args); callers that fit
+    repeatedly should cache the returned function — MultiRestartEngine does."""
+    w = window_size(cfg.batch_size, cfg.tau)
+    step = make_step(kernel, cfg)
+
+    def fit_one(x, key, idx0):
+        state0 = init_state(x, idx0, kernel, w)
+        return run_early_stopped(cfg, sampled_step_with_key(step, x, cfg),
+                                 state0, key)
+
+    @jax.jit
+    def run(x, fit_keys, init_idx, eval_idx):
+        states, iters = jax.vmap(
+            lambda kk, ii: fit_one(x, kk, ii))(fit_keys, init_idx)
+        objs = jax.vmap(
+            lambda s: batch_objective(kernel, s, x, eval_idx))(states)
+        best = jnp.argmin(objs).astype(jnp.int32)
+        best_state = jax.tree.map(lambda a: a[best], states)
+        return EngineResult(state=best_state, objective=objs[best],
+                            objectives=objs, iters=iters, best=best)
+
+    return run
+
+
+class MultiRestartEngine:
+    """Stateful wrapper: holds (kernel, cfg, restarts, mesh) and exposes
+    ``fit`` / ``predict``.  ``mesh=None`` runs all restarts on one device
+    (still one compiled program — the vmap batches every kernel matmul);
+    with a mesh the restart axis is device-sharded and ``predict`` shards
+    query rows for serving."""
+
+    def __init__(self, kernel: KernelFn, cfg: MBConfig, restarts: int = 4,
+                 mesh: Optional[Mesh] = None,
+                 restart_axis: Optional[str] = None,
+                 init: str = "kmeans++",
+                 eval_batch_size: Optional[int] = None):
+        if restarts < 1:
+            raise ValueError("restarts must be >= 1")
+        self.kernel = kernel
+        self.cfg = cfg
+        self.restarts = restarts
+        self.mesh = mesh
+        self.restart_axis = restart_axis
+        self.init = init
+        self.eval_batch_size = eval_batch_size
+        self.result: Optional[EngineResult] = None
+        self._x: Optional[jax.Array] = None
+        self._run = None       # compiled fit program cache
+        self._init_run = None  # compiled init-draw cache
+
+    def fit(self, x: jax.Array, key: jax.Array) -> EngineResult:
+        if self._run is None:
+            self._run = make_restart_run(self.kernel, self.cfg)
+            self._init_run = make_init_run(self.kernel, self.cfg, self.init)
+        self.result = fit_restarts(
+            x, self.kernel, self.cfg, key, self.restarts, init=self.init,
+            mesh=self.mesh, restart_axis=self.restart_axis,
+            eval_batch_size=self.eval_batch_size, _run=self._run,
+            _init_run=self._init_run)
+        self._x = x
+        return self.result
+
+    def predict(self, xq: jax.Array, chunk: int = 4096) -> jax.Array:
+        """Assign query points to the best restart's centers.  With a mesh
+        the queries are row-sharded over every non-'model' axis (the
+        serving path for large query sets)."""
+        if self.result is None:
+            raise RuntimeError("fit() first")
+        from repro.core.minibatch import predict
+        if self.mesh is None:
+            return predict(self.result.state, self._x, xq, self.kernel,
+                           chunk=chunk)
+        from repro.core.distributed import predict_distributed
+        return predict_distributed(self.result.state, self._x, xq,
+                                   self.kernel, self.mesh, chunk=chunk)

@@ -194,6 +194,20 @@ def make_step(kernel: KernelFn, cfg: MBConfig):
     return step
 
 
+def batch_objective(kernel: KernelFn, state: CenterState, x: jax.Array,
+                    batch_idx: jax.Array,
+                    use_pallas: bool = False) -> jax.Array:
+    """f_B(C) = mean_j min_j d(x, C_j) on an explicit batch — the quantity
+    Algorithm 2 early-stops on, exposed standalone so the multi-restart
+    engine can score every restart's centers on one SHARED eval batch
+    (fair on-device model selection, no host sync).  vmap-safe over state."""
+    xb = x[batch_idx]
+    diag_b = kernel_diag(kernel, xb)
+    p = _batch_center_dots(kernel, xb, x, state.idx, state.coef, use_pallas)
+    dists = diag_b[:, None] - 2.0 * p + state.sqnorm[None, :]
+    return jnp.mean(jnp.min(dists, axis=1))
+
+
 def sample_batch(key: jax.Array, n: int, b: int) -> jax.Array:
     """Uniform with replacement (paper's sampling model)."""
     return jax.random.randint(key, (b,), 0, n, dtype=jnp.int32)
@@ -252,14 +266,12 @@ def fit(x: jax.Array, kernel: KernelFn, cfg: MBConfig, key: jax.Array,
     return state, history
 
 
-def fit_jit(x: jax.Array, kernel: KernelFn, cfg: MBConfig, key: jax.Array,
-            init_idx: jax.Array):
-    """Fully-on-device fit: lax.while_loop with the stopping condition in the
-    loop — no per-step host sync (the production/TPU path)."""
-    n = x.shape[0]
-    w = window_size(cfg.batch_size, cfg.tau)
-    state0 = init_state(x, init_idx, kernel, w)
-    step = make_step(kernel, cfg)
+def run_early_stopped(cfg: MBConfig, step_with_key, state, key: jax.Array):
+    """The paper's on-device early-stopped driver, shared by every fit path
+    (fit_jit, the multi-restart engine, the distributed loop): while
+    i < max_iters and the last improvement >= epsilon, split the key and
+    apply ``step_with_key(state, kb) -> (state, improvement)``.
+    Returns (state, iters)."""
 
     def cond(carry):
         _, _, i, imp = carry
@@ -268,28 +280,50 @@ def fit_jit(x: jax.Array, kernel: KernelFn, cfg: MBConfig, key: jax.Array,
     def body(carry):
         state, key, i, _ = carry
         key, kb = jax.random.split(key)
-        bidx = sample_batch(kb, n, cfg.batch_size)
-        state, info = step(state, x, bidx)
-        return state, key, i + 1, info.improvement
+        state, imp = step_with_key(state, kb)
+        return state, key, i + 1, imp
 
-    init_carry = (state0, key, jnp.zeros((), jnp.int32),
+    init_carry = (state, key, jnp.zeros((), jnp.int32),
                   jnp.full((), jnp.inf, jnp.float32))
     state, _, iters, _ = jax.lax.while_loop(cond, body, init_carry)
     return state, iters
 
 
-@functools.partial(jax.jit, static_argnames=("chunk",))
-def predict(state: CenterState, x: jax.Array, xq: jax.Array,
-            kernel: KernelFn, chunk: int = 4096) -> jax.Array:
-    """Assign arbitrary points to the fitted (truncated) centers."""
-    k, w = state.idx.shape
-    sup = x[state.idx.reshape(-1)]
+def sampled_step_with_key(step, x: jax.Array, cfg: MBConfig):
+    """Adapt make_step's (state, x, batch_idx) signature to the
+    run_early_stopped protocol with the canonical uniform batch draw."""
+    n = x.shape[0]
+
+    def step_with_key(state, kb):
+        state, info = step(state, x, sample_batch(kb, n, cfg.batch_size))
+        return state, info.improvement
+
+    return step_with_key
+
+
+def fit_jit(x: jax.Array, kernel: KernelFn, cfg: MBConfig, key: jax.Array,
+            init_idx: jax.Array):
+    """Fully-on-device fit: lax.while_loop with the stopping condition in the
+    loop — no per-step host sync (the production/TPU path)."""
+    w = window_size(cfg.batch_size, cfg.tau)
+    state0 = init_state(x, init_idx, kernel, w)
+    step = make_step(kernel, cfg)
+    return run_early_stopped(cfg, sampled_step_with_key(step, x, cfg),
+                             state0, key)
+
+
+def assign_chunked(kernel: KernelFn, coef: jax.Array, sqnorm: jax.Array,
+                   sup: jax.Array, xq: jax.Array, chunk: int) -> jax.Array:
+    """Chunked nearest-center assignment against explicit (k*W, d) support
+    points — the single serving kernel, shared by ``predict`` and the
+    sharded ``distributed.predict_distributed`` body so their numerics can
+    never diverge."""
+    k, w = coef.shape
 
     def one_chunk(xc):
         cross = kernel_cross(kernel, xc, sup).reshape(xc.shape[0], k, w)
-        p = jnp.einsum("bkw,kw->bk", cross, state.coef)
-        d = (kernel_diag(kernel, xc)[:, None] - 2.0 * p
-             + state.sqnorm[None, :])
+        p = jnp.einsum("bkw,kw->bk", cross, coef)
+        d = kernel_diag(kernel, xc)[:, None] - 2.0 * p + sqnorm[None, :]
         return jnp.argmin(d, axis=1).astype(jnp.int32)
 
     nq = xq.shape[0]
@@ -297,3 +331,11 @@ def predict(state: CenterState, x: jax.Array, xq: jax.Array,
     xp = jnp.pad(xq, ((0, pad),) + ((0, 0),) * (xq.ndim - 1))
     out = jax.lax.map(one_chunk, xp.reshape(-1, chunk, *xq.shape[1:]))
     return out.reshape(-1)[:nq]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def predict(state: CenterState, x: jax.Array, xq: jax.Array,
+            kernel: KernelFn, chunk: int = 4096) -> jax.Array:
+    """Assign arbitrary points to the fitted (truncated) centers."""
+    sup = x[state.idx.reshape(-1)]
+    return assign_chunked(kernel, state.coef, state.sqnorm, sup, xq, chunk)

@@ -35,6 +35,15 @@ def _dispatch(kernel: KernelFn):
     return None
 
 
+def _clamp_tile(tile: int, extent: int, mult: int) -> int:
+    """Shrink a tile to the padded extent of a small dimension (rounded up
+    to ``mult``).  Per-shard support tiles in the distributed step can be
+    far smaller than the 128-default tiles — without clamping, interpret
+    mode would pad a (b/D, k/D * W) shard up to a full 128x128 grid cell
+    and waste most of the work."""
+    return min(tile, max(mult, -(-extent // mult) * mult))
+
+
 def fused_batch_center_dots(kernel: KernelFn, xb: jax.Array,
                             sup_flat: jax.Array, coef: jax.Array,
                             bt: int = 128, st: int = 128,
@@ -48,6 +57,11 @@ def fused_batch_center_dots(kernel: KernelFn, xb: jax.Array,
     kind, p0, p1, p2 = disp
     if interpret is None:
         interpret = _interpret_default()
+    if interpret:
+        # CPU/interpret: no MXU tiling constraints, so fit the tiles to the
+        # (possibly per-shard) problem.  TPU keeps the caller's tiles.
+        bt = _clamp_tile(bt, xb.shape[0], 8)
+        st = _clamp_tile(st, w, 8)
     return fused_batch_center_dots_pallas(
         xb, sup, coef, kind=kind, p0=p0, p1=p1, p2=p2, bt=bt, st=st,
         interpret=interpret)

@@ -20,5 +20,19 @@ def make_host_mesh(model: int = 2):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def make_restart_mesh(restarts: int, axis: str = "restart"):
+    """1-axis mesh for the multi-restart clustering engine.
+
+    The restart axis must DIVIDE the restart count (each device owns a
+    whole number of restarts), so this picks the largest device count
+    <= min(restarts, len(devices)) that divides ``restarts`` — e.g.
+    R=4 on 8 devices -> a 4-device mesh; R=6 on 4 -> 3 devices;
+    prime R=7 on 4 -> 1 device."""
+    devs = jax.devices()
+    size = next(d for d in range(min(restarts, len(devs)), 0, -1)
+                if restarts % d == 0)
+    return jax.make_mesh((size,), (axis,), devices=devs[:size])
+
+
 def data_axes_of(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a != "model")

@@ -1,7 +1,13 @@
-"""Serving launcher: batched prefill + decode loop.
+"""Serving launcher: batched prefill + decode loop, plus the clustering
+serving path (multi-restart fit -> sharded assignment of large query sets).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
         --batch 4 --prompt-len 32 --gen 16
+
+    # clustering: fit best-of-R on-device, then serve sharded predictions
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --cluster --restarts 4 \
+        --n 8192 --queries 65536 --k 8
 """
 from __future__ import annotations
 
@@ -11,19 +17,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config
-from repro.models import decode_step, init_params, prefill
 
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def serve_lm(args):
+    from repro.configs import get_config
+    from repro.models import decode_step, init_params, prefill
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -66,6 +63,74 @@ def main():
     print(f"decode:  {t_decode * 1e3:.1f} ms "
           f"({b * (args.gen - 1) / max(t_decode, 1e-9):.0f} tok/s)")
     print("sample token ids:", gen[0, :10].tolist())
+
+
+def serve_cluster(args):
+    """Fit the multi-restart engine, then serve sharded batch assignment —
+    the clustering analogue of prefill+decode: one expensive fit, then
+    high-throughput predict over query shards."""
+    from repro.core import Gaussian, MBConfig, MultiRestartEngine
+    from repro.core.distributed import predict_distributed
+    from repro.data import blobs
+    from repro.launch.mesh import make_restart_mesh
+
+    x, _ = blobs(n=args.n, d=args.d, k=args.k, seed=args.seed)
+    x = jnp.asarray(x)
+    kern = Gaussian(kappa=jnp.float32(1.0))
+    cfg = MBConfig(k=args.k, batch_size=args.batch_size, tau=args.tau,
+                   max_iters=args.max_iters, epsilon=-1.0)
+    mesh = make_restart_mesh(args.restarts)
+    eng = MultiRestartEngine(kern, cfg, restarts=args.restarts, mesh=mesh)
+
+    t0 = time.time()
+    res = eng.fit(x, jax.random.PRNGKey(args.seed))
+    jax.block_until_ready(res.objectives)
+    t_fit = time.time() - t0
+    print(f"cluster fit: R={args.restarts} on {mesh.devices.size} device(s) "
+          f"in {t_fit * 1e3:.1f} ms; best objective "
+          f"{float(res.objective):.4f} (restart {int(res.best)}, "
+          f"per-restart {[round(float(o), 4) for o in res.objectives]})")
+
+    xq = jnp.tile(x, (-(-args.queries // args.n), 1))[:args.queries]
+    pred = predict_distributed(res.state, x, xq, kern, mesh)  # warm compile
+    pred.block_until_ready()
+    t0 = time.time()
+    pred = predict_distributed(res.state, x, xq, kern, mesh)
+    pred.block_until_ready()
+    t_pred = time.time() - t0
+    print(f"serve: {xq.shape[0]} queries in {t_pred * 1e3:.1f} ms "
+          f"({xq.shape[0] / max(t_pred, 1e-9):.0f} assignments/s, "
+          f"sharded over {mesh.devices.size} device(s))")
+    print("cluster sizes:", jnp.bincount(pred, length=args.k).tolist())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    # clustering serving path
+    ap.add_argument("--cluster", action="store_true",
+                    help="serve kernel k-means assignments instead of an LM")
+    ap.add_argument("--restarts", type=int, default=4)
+    ap.add_argument("--n", type=int, default=8192)
+    ap.add_argument("--d", type=int, default=16)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--queries", type=int, default=65536)
+    ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--tau", type=int, default=128)
+    ap.add_argument("--max-iters", type=int, default=40)
+    args = ap.parse_args()
+
+    if args.cluster:
+        serve_cluster(args)
+        return
+    if args.arch is None:
+        raise SystemExit("--arch is required unless --cluster is given")
+    serve_lm(args)
 
 
 if __name__ == "__main__":

@@ -192,6 +192,25 @@ def cache_specs(cache_shape: Any, mesh: Mesh, hybrid: bool = False):
         treedef, [rule(p, l) for p, l in flat])
 
 
+# ------------------------------------------------------- clustering engine
+def restart_placements(mesh: Mesh, restart_axis: str, sharded: Any,
+                       replicated: Any = None):
+    """Placements for the multi-restart clustering engine: every leaf of
+    ``sharded`` has its leading (restart) axis split over ``restart_axis``;
+    every leaf of ``replicated`` is broadcast to all devices.  Returns the
+    device_put trees (sharded_tree, replicated_tree)."""
+
+    def shard_one(a):
+        spec = P(restart_axis, *([None] * (a.ndim - 1)))
+        return jax.device_put(a, NamedSharding(mesh, spec))
+
+    sh = jax.tree.map(shard_one, sharded)
+    rep = (jax.tree.map(
+        lambda a: jax.device_put(a, NamedSharding(mesh, P())), replicated)
+        if replicated is not None else None)
+    return sh, rep
+
+
 # ------------------------------------------------------------- train state
 def train_state_specs(state_shape: Any, mesh: Mesh, hybrid: bool = False,
                       replicate_patterns: tuple = ()):

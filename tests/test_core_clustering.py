@@ -3,11 +3,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests; suite degrades, not errors
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
-    Gaussian, MBConfig, adjusted_rand_index, fit, fit_jit, gamma_of,
-    init_state, make_step, predict, sample_batch, window_size,
+    Gaussian, Linear, MBConfig, Polynomial, adjusted_rand_index, fit,
+    fit_jit, gamma_of, init_state, make_step, predict, sample_batch,
+    window_size,
 )
 from repro.core import fullbatch, lloyd, untruncated
 from repro.core.init import kmeans_plus_plus
@@ -211,6 +214,54 @@ def test_truncation_error_bounded_property(seed):
     for a, c in zip(h2, h1):
         # |f_B(C_hat) - f_B(C)| <= 4*gamma*||C_hat - C|| <= eps/7 (Lemma 13)
         assert abs(a["f_after"] - c["f_after"]) <= eps / 7 + 1e-4
+
+
+_PROP_KERNELS = {
+    "gaussian": lambda p: Gaussian(kappa=jnp.float32(0.5 + 3.0 * p)),
+    "linear": lambda p: Linear(),
+    "polynomial": lambda p: Polynomial(
+        bias=jnp.float32(1.0), scale=jnp.float32(1.0 + 3.0 * p), degree=2),
+}
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(sorted(_PROP_KERNELS)), st.floats(0.0, 1.0),
+       st.integers(16, 96), st.integers(8, 64), st.integers(0, 2 ** 16))
+def test_sqnorm_incremental_matches_recompute_property(kname, kp, b, tau,
+                                                       seed):
+    """O(kWb) incremental <C,C> maintenance == the paper's O(kW^2) recompute
+    across random kernels / batch sizes / window sizes."""
+    x, _ = _blobs(n=384, d=8, k=3, seed=seed % 5)
+    kern = _PROP_KERNELS[kname](kp)
+    base = MBConfig(k=3, batch_size=b, tau=tau, max_iters=6, epsilon=-1.0)
+    init_idx = jnp.array([0, 50, 100], jnp.int32)
+    key = jax.random.PRNGKey(seed)
+    s_rec, _ = fit(x, kern, base, key, init_idx=init_idx, early_stop=False)
+    s_inc, _ = fit(x, kern, base._replace(sqnorm_mode="incremental"), key,
+                   init_idx=init_idx, early_stop=False)
+    scale = float(jnp.max(jnp.abs(s_rec.sqnorm))) + 1.0
+    np.testing.assert_allclose(s_inc.sqnorm, s_rec.sqnorm,
+                               atol=3e-4 * scale)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(sorted(_PROP_KERNELS)), st.floats(0.0, 1.0),
+       st.integers(16, 96), st.integers(8, 64), st.integers(0, 2 ** 16))
+def test_eval_delta_matches_direct_property(kname, kp, b, tau, seed):
+    """O(kb^2) delta objective evaluation == the paper's direct O(kbW) pass
+    across random kernels / batch sizes."""
+    x, _ = _blobs(n=384, d=8, k=3, seed=seed % 5)
+    kern = _PROP_KERNELS[kname](kp)
+    base = MBConfig(k=3, batch_size=b, tau=tau, max_iters=6, epsilon=-1.0)
+    init_idx = jnp.array([0, 50, 100], jnp.int32)
+    key = jax.random.PRNGKey(seed)
+    _, h_dir = fit(x, kern, base, key, init_idx=init_idx, early_stop=False)
+    _, h_del = fit(x, kern, base._replace(eval_mode="delta"), key,
+                   init_idx=init_idx, early_stop=False)
+    scale = max(abs(h["f_after"]) for h in h_dir) + 1.0
+    for a, c in zip(h_del, h_dir):
+        assert a["f_after"] == pytest.approx(c["f_after"],
+                                             abs=3e-4 * scale)
 
 
 def test_predict_self_consistent():

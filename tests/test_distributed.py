@@ -1,4 +1,5 @@
-"""Distributed (shard_map) step equivalence — runs in a subprocess with
+"""Distributed (shard_map) + multi-restart engine equivalence on 8 virtual
+devices — runs in subprocesses with
 XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main pytest
 process keeps its single real CPU device."""
 import os
@@ -8,7 +9,21 @@ import textwrap
 
 import pytest
 
-SCRIPT = textwrap.dedent("""
+
+def _run(script: str, ok_token: str, timeout: int = 600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert ok_token in r.stdout, r.stdout[-2000:]
+    return r.stdout
+
+
+STEP_EQUIVALENCE = """
     import jax, jax.numpy as jnp, numpy as np
     from repro.core import MBConfig, Gaussian, init_state, window_size, make_step
     from repro.core.distributed import (
@@ -25,22 +40,27 @@ SCRIPT = textwrap.dedent("""
     init_idx = jnp.arange(8, dtype=jnp.int32) * 100
     w = window_size(cfg.batch_size, cfg.tau)
 
-    st = init_state(x, init_idx, kern, w)
-    step1 = jax.jit(make_step(kern, cfg))
-    dst = jax.device_put(init_dist_state(x[init_idx], kern, w),
-                         state_shardings(mesh))
-    stepd = jax.jit(make_dist_step(kern, cfg, mesh))
-
-    key = jax.random.PRNGKey(7)
-    for i in range(6):
-        key, kb = jax.random.split(key)
-        bidx = sample_batch(kb, x.shape[0], cfg.batch_size)
-        st, i1 = step1(st, x, bidx)
-        dst, i2 = stepd(dst, x[bidx])
-        assert abs(float(i1.f_before) - float(i2.f_before)) < 1e-5, i
-        assert abs(float(i1.f_after) - float(i2.f_after)) < 1e-5, i
-    np.testing.assert_allclose(np.asarray(st.sqnorm), np.asarray(dst.sqnorm),
-                               atol=1e-5)
+    # use_pallas=True additionally exercises the fused Pallas kernel on
+    # per-shard support tiles (interpret mode on CPU) inside shard_map
+    for use_pallas in (False, True):
+        c = cfg._replace(use_pallas=use_pallas)
+        st = init_state(x, init_idx, kern, w)
+        step1 = jax.jit(make_step(kern, c))
+        dst = jax.device_put(init_dist_state(x[init_idx], kern, w),
+                             state_shardings(mesh))
+        stepd = jax.jit(make_dist_step(kern, c, mesh))
+        key = jax.random.PRNGKey(7)
+        for i in range(6):
+            key, kb = jax.random.split(key)
+            bidx = sample_batch(kb, x.shape[0], cfg.batch_size)
+            st, i1 = step1(st, x, bidx)
+            dst, i2 = stepd(dst, x[bidx])
+            assert abs(float(i1.f_before) - float(i2.f_before)) < 1e-5, \\
+                (use_pallas, i)
+            assert abs(float(i1.f_after) - float(i2.f_after)) < 1e-5, \\
+                (use_pallas, i)
+        np.testing.assert_allclose(np.asarray(st.sqnorm),
+                                   np.asarray(dst.sqnorm), atol=1e-5)
 
     # multi-pod style 3-axis mesh also works
     mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
@@ -52,7 +72,7 @@ SCRIPT = textwrap.dedent("""
                                            x.shape[0], cfg.batch_size)])
     assert np.isfinite(float(i3.f_before))
 
-    # fit_distributed end-to-end over a stream
+    # fit_distributed end-to-end over a host stream
     def stream():
         key = jax.random.PRNGKey(3)
         while True:
@@ -64,16 +84,108 @@ SCRIPT = textwrap.dedent("""
     assert len(hist) == 10
     assert hist[-1]["f_before"] < hist[0]["f_before"]
     print("DISTRIBUTED-OK")
-""")
+"""
+
+
+ONDEVICE_FIT = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import MBConfig, Gaussian
+    from repro.core.distributed import (
+        fit_distributed_jit, predict_distributed, dist_to_center_state)
+    from repro.data import blobs
+
+    assert len(jax.devices()) == 8
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    x, _ = blobs(n=2048, d=16, k=8, seed=0)
+    x = jnp.asarray(x)
+    kern = Gaussian(kappa=jnp.float32(2.0))
+    cfg = MBConfig(k=8, batch_size=128, tau=64, max_iters=15, epsilon=-1.0)
+    init_idx = jnp.arange(8, dtype=jnp.int32) * 100
+
+    # whole early-stopped loop on-device: dataset sharded, batches sampled
+    # shard-locally, zero per-step host sync
+    dst, iters = fit_distributed_jit(x, x[init_idx], kern, cfg, mesh,
+                                     jax.random.PRNGKey(3))
+    assert int(iters) == cfg.max_iters
+    assert bool(jnp.all(jnp.isfinite(dst.sqnorm)))
+    assert float(jnp.sum(dst.counts)) == cfg.batch_size * cfg.max_iters
+
+    # early stopping still terminates the on-device loop
+    dst2, iters2 = fit_distributed_jit(
+        x, x[init_idx], kern, cfg._replace(max_iters=300, epsilon=0.01),
+        mesh, jax.random.PRNGKey(4))
+    assert int(iters2) < 300
+
+    # sharded serving straight from the distributed state
+    cs = dist_to_center_state(dst)
+    sup = dst.pts.reshape(-1, dst.pts.shape[-1])
+    pred = predict_distributed(cs, sup, x[:999], kern, mesh)
+    assert pred.shape == (999,)
+    assert int(jnp.max(pred)) < 8 and int(jnp.min(pred)) >= 0
+    print("ONDEVICE-OK")
+"""
+
+
+ENGINE_8DEV = """
+    import time
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import MBConfig, Gaussian, fit_jit
+    from repro.core.engine import MultiRestartEngine
+    from repro.data import blobs
+    from repro.launch.mesh import make_restart_mesh
+
+    assert len(jax.devices()) == 8
+    x, _ = blobs(n=2048, d=16, k=8, seed=0)
+    x = jnp.asarray(x)
+    kern = Gaussian(kappa=jnp.float32(2.0))
+    cfg = MBConfig(k=8, batch_size=128, tau=64, max_iters=15, epsilon=-1.0)
+
+    # restart-sharded engine == unsharded engine, bitwise-comparable
+    mesh = make_restart_mesh(4)
+    assert mesh.devices.size == 4
+    eng = MultiRestartEngine(kern, cfg, restarts=4, mesh=mesh)
+    res = eng.fit(x, jax.random.PRNGKey(0))
+    eng0 = MultiRestartEngine(kern, cfg, restarts=4)
+    res0 = eng0.fit(x, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(res.objectives),
+                               np.asarray(res0.objectives), atol=1e-6)
+    assert int(res.best) == int(res0.best)
+
+    # sharded predict == unsharded predict on the same winner
+    p = eng.predict(x[:999])
+    p0 = eng0.predict(x[:999])
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p0))
+
+    # wall-clock: best-of-4 in one compiled program stays under 2x the
+    # repo's single-restart entry point (fit_jit pays a re-trace per call;
+    # the engine amortizes its compile across fits)
+    init_idx = jnp.arange(8, dtype=jnp.int32) * 100
+    t0 = time.perf_counter()
+    _, it = fit_jit(x, kern, cfg, jax.random.PRNGKey(5), init_idx)
+    jax.block_until_ready(it)
+    t_single = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r = eng.fit(x, jax.random.PRNGKey(5))
+    jax.block_until_ready(r.objectives)
+    t_multi = time.perf_counter() - t0
+    ratio = t_multi / t_single
+    print(f"R4 vs single ratio: {ratio:.2f}")
+    assert ratio < 2.0, (t_multi, t_single)
+    print("ENGINE-8DEV-OK")
+"""
 
 
 @pytest.mark.slow
 def test_distributed_equivalence_8dev():
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = "src"
-    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                       capture_output=True, text=True, timeout=600,
-                       cwd=os.path.dirname(os.path.dirname(__file__)))
-    assert r.returncode == 0, r.stderr[-3000:]
-    assert "DISTRIBUTED-OK" in r.stdout
+    _run(STEP_EQUIVALENCE, "DISTRIBUTED-OK")
+
+
+@pytest.mark.slow
+def test_fit_distributed_jit_8dev():
+    _run(ONDEVICE_FIT, "ONDEVICE-OK")
+
+
+@pytest.mark.slow
+def test_engine_8dev_equivalence_and_wallclock():
+    out = _run(ENGINE_8DEV, "ENGINE-8DEV-OK")
+    assert "ratio" in out

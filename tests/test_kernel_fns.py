@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests; suite degrades, not errors
 from hypothesis import given, settings, strategies as st
 
 from repro.core.kernel_fns import (

@@ -1,5 +1,7 @@
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests; suite degrades, not errors
 from hypothesis import given, settings, strategies as st
 
 from repro.core.metrics import adjusted_rand_index, normalized_mutual_info

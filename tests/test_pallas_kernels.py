@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests; suite degrades, not errors
 from hypothesis import given, settings, strategies as st
 
 from repro.core.kernel_fns import Gaussian, Linear, Polynomial
@@ -71,6 +73,23 @@ def test_fused_assign_property(b, k, w, d, seed):
     sup = _rand((k, w, d), seed + 1)
     coef = jnp.abs(_rand((k, w), seed + 2)) / w
     got = fused_batch_center_dots_pallas(xb, sup, coef, bt=8, st=8,
+                                         interpret=True, **kw)
+    want = ref.batch_center_dots(kern, xb, sup, coef)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 48), st.integers(1, 4), st.integers(1, 48),
+       st.integers(1, 24), st.sampled_from([4, 8, 16, 32, 128]),
+       st.sampled_from([4, 8, 16, 32, 128]), st.integers(0, 2 ** 16))
+def test_fused_assign_tile_sweep_property(b, k, w, d, bt, st_, seed):
+    """Tiling invariance: any (bt, st) tile pair gives the einsum answer —
+    the property the per-shard tile clamping in ops.py relies on."""
+    kern, kw = KERNELS["gaussian"]
+    xb = _rand((b, d), seed)
+    sup = _rand((k, w, d), seed + 1)
+    coef = jnp.abs(_rand((k, w), seed + 2)) / w
+    got = fused_batch_center_dots_pallas(xb, sup, coef, bt=bt, st=st_,
                                          interpret=True, **kw)
     want = ref.batch_center_dots(kern, xb, sup, coef)
     np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
