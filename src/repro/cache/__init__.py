@@ -1,0 +1,27 @@
+"""repro.cache — Gram tile cache subsystem (nested-batch kernel reuse).
+
+Batches sampled with replacement keep re-evaluating the same K(x_i, x_j)
+tiles across Algorithm-2 iterations.  This package makes that reuse
+explicit:
+
+    GramTileCache    fixed-capacity, device-resident LRU over Gram row
+                     blocks (jit-carryable pytree; tile_cache.py)
+    CachedKernel     KernelFn adapter: registered into kernel_cross /
+                     kernel_diag, so fit / predict / shard_map call sites
+                     consume it unchanged (cached_kernel.py)
+    PrecomputedGram  the O(n^2) full-Gram fast path for small n
+                     (precomputed.py)
+
+Importing this package registers ``CachedKernel`` with
+``repro.core.kernel_fns``.
+"""
+from repro.cache.tile_cache import (  # noqa: F401
+    GramTileCache, create_cache, lookup_rows, stats, warm,
+)
+from repro.cache.cached_kernel import (  # noqa: F401
+    CachedKernel, cross_rows_readonly, cross_update, make_cached,
+    predict_cached, warm_rows,
+)
+from repro.cache.precomputed import (  # noqa: F401
+    PrecomputedGram, as_kernel, precompute_gram,
+)

@@ -1,0 +1,140 @@
+"""``CachedKernel`` — a KernelFn adapter over the Gram tile cache.
+
+A ``CachedKernel`` wraps a base kernel, the real ``(n, d)`` dataset, and a
+:class:`repro.cache.tile_cache.GramTileCache`.  Like the existing
+``Precomputed`` kernel, the "data" that flows through every algorithm in
+:mod:`repro.core` is an ``(m, 1)`` array of float row indices into the
+dataset — which is exactly what lets call sites stay unchanged: the whole
+truncated-center machinery (init, fit, predict, the shard_map step) is
+already index-agnostic because ``Precomputed`` exists.
+
+Two access modes:
+
+* **Functional read-through** (registered into ``kernel_cross`` /
+  ``kernel_diag``): hits are gathered from the resident tiles, misses are
+  recomputed on the fly *without* inserting (the KernelFn contract returns
+  only the matrix, so state cannot be threaded).  Correct always; fast when
+  the cache has been warmed.
+* **Stateful** (:func:`cross_update`, :func:`warm_rows`,
+  :func:`predict_cached`): lookups insert on miss, maintain LRU stamps and
+  hit/miss/eviction counters, and return the updated ``CachedKernel`` —
+  the fit / serving paths thread it through their loops.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache import tile_cache
+from repro.cache.tile_cache import GramTileCache
+from repro.core.kernel_fns import (
+    KernelFn, diag_is_one, diag_of, kernel_diag, register_kernel,
+)
+
+
+class CachedKernel(NamedTuple):
+    """KernelFn pytree: base kernel + dataset coordinates + tile cache."""
+
+    base: KernelFn        # the kernel actually evaluated on misses
+    x: jax.Array          # (n, d) real dataset coordinates
+    cache: GramTileCache  # device-resident row-block strips of K(x, x)
+
+
+def make_cached(base: KernelFn, x: jax.Array, tile: int = 256,
+                capacity: int = 16,
+                dtype=jnp.float32) -> Tuple[CachedKernel, jax.Array]:
+    """Build a cold CachedKernel over ``x`` and the index-data view ``xi``
+    (``(n, 1)`` float row ids — pass ``xi`` wherever the algorithms expect
+    the dataset, mirroring the ``Precomputed`` convention)."""
+    n = x.shape[0]
+    if n > 2 ** 24:
+        raise ValueError(f"n={n} row ids are not exactly representable in "
+                         "the float32 index-data convention (max 2**24)")
+    ck = CachedKernel(base=base, x=x,
+                      cache=tile_cache.create_cache(n, tile, capacity, dtype))
+    # ids always in float32: half-precision dataset dtypes cannot represent
+    # row ids past 256 and would silently alias rows
+    xi = jnp.arange(n, dtype=jnp.float32)[:, None]
+    return ck, xi
+
+
+def _row_ids(data: jax.Array) -> jax.Array:
+    return data[:, 0].astype(jnp.int32)
+
+
+def cross_update(ck: CachedKernel, xi: jax.Array, yi: jax.Array,
+                 max_blocks: Optional[int] = None):
+    """Stateful K(x[ri], x[ci]): inserts missing row blocks (LRU) and
+    updates counters.  Returns ``(K (m, c) f32, ck')``."""
+    out, cache = tile_cache.lookup_rows(
+        ck.cache, ck.base, ck.x, _row_ids(xi), _row_ids(yi),
+        insert=True, max_blocks=max_blocks)
+    return out, ck._replace(cache=cache)
+
+
+def warm_rows(ck: CachedKernel, ridx: jax.Array,
+              max_blocks: Optional[int] = None) -> CachedKernel:
+    """Make the row blocks of ``ridx`` resident (the per-iteration prologue
+    of the cached fit loop: warm batch + window rows, then let the unchanged
+    Algorithm-2 step serve every cross-kernel block as a hit)."""
+    return ck._replace(cache=tile_cache.warm(
+        ck.cache, ck.base, ck.x, ridx.astype(jnp.int32).reshape(-1),
+        max_blocks=max_blocks))
+
+
+def _cross_readonly(ck: CachedKernel, xi: jax.Array,
+                    yi: jax.Array) -> jax.Array:
+    """kernel_cross contract: read-through lookup, state updates dropped."""
+    out, _ = tile_cache.lookup_rows(ck.cache, ck.base, ck.x,
+                                    _row_ids(xi), _row_ids(yi), insert=False)
+    return out
+
+
+def cross_rows_readonly(ck: CachedKernel, xi: jax.Array) -> jax.Array:
+    """Full Gram rows K(x[ri], x) (m, n) read-through — the input to the
+    Pallas gather-from-cache assignment kernel (repro.kernels.ops
+    .cached_assign_dots)."""
+    out, _ = tile_cache.lookup_rows(ck.cache, ck.base, ck.x,
+                                    _row_ids(xi), None, insert=False)
+    return out
+
+
+def _diag(ck: CachedKernel, xi: jax.Array) -> jax.Array:
+    """kernel_diag contract: O(m), never touches the tile store."""
+    return kernel_diag(ck.base, ck.x[_row_ids(xi)])
+
+
+register_kernel(CachedKernel, cross=_cross_readonly, diag=_diag,
+                diag_one=lambda ck: diag_is_one(ck.base),
+                gram_rows=cross_rows_readonly)
+
+
+def predict_cached(ck: CachedKernel, state, xq_idx: jax.Array,
+                   chunk: int = 4096):
+    """Cache-aware serving: assign query rows (given as dataset row indices)
+    to the fitted truncated centers, threading the cache across chunks so
+    repeated query rows hit warm tiles.  Numerics match
+    ``repro.core.minibatch.predict`` on the index-data view; returns
+    ``(labels (nq,), ck')`` — counters on ``ck'`` are the serving hit/miss
+    telemetry."""
+    k, w = state.coef.shape
+    sup_ids = state.idx.reshape(-1).astype(jnp.int32)
+    qi = xq_idx.reshape(-1).astype(jnp.int32)
+    nq = qi.shape[0]
+    chunk = min(chunk, max(nq, 1))
+    pad = (-nq) % chunk
+    qp = jnp.pad(qi, (0, pad)).reshape(-1, chunk)
+
+    def one_chunk(ck, rows):
+        cross, cache = tile_cache.lookup_rows(
+            ck.cache, ck.base, ck.x, rows, sup_ids, insert=True)
+        p = jnp.einsum("bkw,kw->bk", cross.reshape(chunk, k, w), state.coef)
+        diag_b = diag_of(ck.base, ck.x[rows]).astype(p.dtype)
+        d = diag_b[:, None] - 2.0 * p + state.sqnorm[None, :]
+        return ck._replace(cache=cache), jnp.argmin(d, axis=1) \
+            .astype(jnp.int32)
+
+    ck, out = jax.lax.scan(one_chunk, ck, qp)
+    return out.reshape(-1)[:nq], ck

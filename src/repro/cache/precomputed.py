@@ -1,0 +1,63 @@
+"""``PrecomputedGram`` — the full-Gram fast path for small n.
+
+When ``n`` is small enough that the O(n^2) Gram matrix fits on device
+(n = 16384 float32 is 1 GiB; the paper's datasets are far smaller), LRU
+machinery is pure overhead: compute every strip exactly once up front and
+serve all lookups as gathers.  This is the same trick the seed's graph
+kernels (heat / k-nn, ``repro.data.graph_kernels``) already use — here it
+is available for *any* base kernel.
+
+``precompute_gram`` builds the matrix in row strips via ``lax.map`` so the
+peak working set stays at ``block * n`` instead of requiring an
+``(n, n)``-sized intermediate per kernel evaluation pass, and
+``as_kernel`` hands back a plain :class:`repro.core.kernel_fns.Precomputed`
+plus the index-data view — from there every algorithm in repro.core
+consumes it natively.
+
+Crossover vs the LRU tile cache (see docs/cache.md): PrecomputedGram wins
+when the fit + serving workload will eventually touch most row blocks
+(total misses ~ n/tile strips anyway) or when n^2 memory is cheap;
+the LRU wins when n is large and the working set (batch + windows) is a
+small, slowly-drifting subset of the dataset.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernel_fns import KernelFn, Precomputed, kernel_cross
+
+
+class PrecomputedGram(NamedTuple):
+    """Full Gram shards, row-major: ``gram[i, j] = K(x_i, x_j)``."""
+
+    gram: jax.Array  # (n, n)
+
+    @property
+    def n(self) -> int:
+        return self.gram.shape[0]
+
+
+def precompute_gram(base: KernelFn, x: jax.Array, block: int = 1024,
+                    dtype=jnp.float32) -> PrecomputedGram:
+    """Compute K(x, x) once, in ``block``-row strips (bounded peak memory).
+    Rows are padded to a block multiple and the pad rows sliced away."""
+    n = x.shape[0]
+    b = min(block, n)
+    pad = (-n) % b
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+
+    def strip(rows):
+        return kernel_cross(base, rows, x).astype(dtype)
+
+    g = jax.lax.map(strip, xp.reshape(-1, b, x.shape[1]))
+    return PrecomputedGram(gram=g.reshape(-1, n)[:n])
+
+
+def as_kernel(pg: PrecomputedGram) -> Tuple[Precomputed, jax.Array]:
+    """View as a core ``Precomputed`` kernel + its (n, 1) index data —
+    drop-in for fit / predict / the distributed paths."""
+    xi = jnp.arange(pg.n, dtype=jnp.float32)[:, None]
+    return Precomputed(gram=pg.gram), xi

@@ -1,0 +1,237 @@
+"""Device-resident Gram tile cache — LRU over dataset row blocks.
+
+Every step of Algorithm 2 pays O(k (tau+b)^2) kernel evaluations, but
+batches sampled with replacement keep hitting the same support rows (the
+``CenterState.idx`` windows change slowly), so most K(x_i, x_j) tiles are
+recomputed verbatim across iterations.  This module caches *row-block
+strips* of the full Gram matrix: entry ``b`` holds
+``K(x[b*tile:(b+1)*tile], x)`` of shape ``(tile, n)``, so any cross-kernel
+block K(x[ridx], x[cidx]) is a gather once the row blocks of ``ridx`` are
+resident.
+
+Design constraints (all driven by jit):
+
+* **Fixed capacity, fixed shapes.**  The store is a ``(capacity, tile, n)``
+  array; keys / LRU stamps are small int32 arrays.  The whole cache is a
+  NamedTuple pytree, so it can be carried through ``lax.scan`` /
+  ``lax.while_loop`` and donated across jit calls.
+* **Block-granular ``lax.cond``.**  A lookup scans the (padded, unique) row
+  blocks of the query; each step is one ``cond(hit, gather, compute)``.
+  ``cond`` executes a single branch, so cache hits genuinely skip the
+  kernel evaluation — this is where the wall-clock win comes from.  (Under
+  ``vmap`` a ``cond`` lowers to ``select`` and both branches run; keep
+  cached lookups out of vmapped axes.)
+* **Stats as state.**  hit / miss / eviction counters ride in the pytree,
+  so the serving demo and the ``kernel_cache`` benchmark report *measured*
+  kernel-evaluation counts, not estimates.
+
+See docs/cache.md for capacity / tile-size tuning guidance and for when
+:class:`repro.cache.precomputed.PrecomputedGram` (the O(n^2) full-Gram fast
+path) beats the LRU.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernel_fns import KernelFn, kernel_cross
+
+
+class GramTileCache(NamedTuple):
+    """Fixed-capacity LRU tile store (a jit-carryable pytree).
+
+    Invariants:
+    * ``keys[s] == -1``  <=>  slot ``s`` is empty (its ``stamp`` is -1).
+    * resident keys are unique block ids in ``[0, n // tile)``.
+    * ``stamp[s]`` is the clock value of slot ``s``'s last touch; the LRU
+      victim is ``argmin(stamp)`` (empty slots sort first).
+    """
+
+    store: jax.Array      # (capacity, tile, n) cached Gram row strips
+    keys: jax.Array       # (capacity,) int32 block id, -1 = empty
+    stamp: jax.Array      # (capacity,) int32 last-use clock, -1 = empty
+    clock: jax.Array      # () int32 monotonic use counter
+    hits: jax.Array       # () int32
+    misses: jax.Array     # () int32  (each miss = tile * n kernel evals)
+    evictions: jax.Array  # () int32
+
+    @property
+    def capacity(self) -> int:
+        return self.store.shape[0]
+
+    @property
+    def tile(self) -> int:
+        return self.store.shape[1]
+
+    @property
+    def n(self) -> int:
+        return self.store.shape[2]
+
+    @property
+    def n_blocks(self) -> int:
+        return self.n // self.tile
+
+
+def create_cache(n: int, tile: int, capacity: int,
+                 dtype=jnp.float32) -> GramTileCache:
+    """Empty cache over an ``n``-row dataset partitioned into ``n / tile``
+    row blocks.  ``tile`` must divide ``n`` (blocks must not overlap — a row
+    in two blocks would break key identity)."""
+    if n % tile:
+        raise ValueError(f"tile {tile} must divide dataset rows {n} "
+                         "(subsample or pick a divisor)")
+    if capacity < 1:
+        raise ValueError("capacity must be >= 1")
+    def z():
+        # distinct buffers — donating the cache alongside other state must
+        # not hand XLA the same buffer twice
+        return jnp.zeros((), jnp.int32)
+
+    return GramTileCache(
+        store=jnp.zeros((capacity, tile, n), dtype),
+        keys=jnp.full((capacity,), -1, jnp.int32),
+        stamp=jnp.full((capacity,), -1, jnp.int32),
+        clock=z(), hits=z(), misses=z(), evictions=z())
+
+
+def _padded_unique_blocks(blocks: jax.Array, max_blocks: int) -> jax.Array:
+    """Unique block ids of ``blocks`` compacted to the front of a fixed
+    ``(max_blocks,)`` vector, padded with -1.  ``max_blocks`` must bound the
+    true unique count (``min(n_blocks, len(blocks))`` always does)."""
+    s = jnp.sort(blocks)
+    first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    perm = jnp.argsort(jnp.logical_not(first), stable=True)
+    return jnp.where(first[perm], s[perm], -1)[:max_blocks]
+
+
+def _ensure_block(cache: GramTileCache, base: KernelFn, x: jax.Array,
+                  bid: jax.Array, insert: bool):
+    """cond(hit -> gather + LRU touch, miss -> compute strip [+ insert]).
+    Returns (cache', strip (tile, n)).  ``bid`` must be a valid block id."""
+    tile = cache.tile
+    present = cache.keys == bid
+    slot_h = jnp.argmax(present)
+
+    def on_hit(cache):
+        strip = jax.lax.dynamic_index_in_dim(cache.store, slot_h, 0,
+                                             keepdims=False)
+        return cache._replace(
+            stamp=cache.stamp.at[slot_h].set(cache.clock),
+            clock=cache.clock + 1, hits=cache.hits + 1), strip
+
+    def on_miss(cache):
+        rows = jax.lax.dynamic_slice_in_dim(x, bid * tile, tile, 0)
+        strip = kernel_cross(base, rows, x).astype(cache.store.dtype)
+        cache = cache._replace(misses=cache.misses + 1)
+        if insert:
+            slot = jnp.argmin(cache.stamp)      # empties (-1) evict first
+            cache = cache._replace(
+                store=jax.lax.dynamic_update_index_in_dim(
+                    cache.store, strip, slot, 0),
+                keys=cache.keys.at[slot].set(bid.astype(jnp.int32)),
+                stamp=cache.stamp.at[slot].set(cache.clock),
+                clock=cache.clock + 1,
+                evictions=cache.evictions
+                + (cache.keys[slot] >= 0).astype(jnp.int32))
+        return cache, strip
+
+    return jax.lax.cond(jnp.any(present), on_hit, on_miss, cache)
+
+
+def warm(cache: GramTileCache, base: KernelFn, x: jax.Array,
+         ridx: jax.Array,
+         max_blocks: Optional[int] = None) -> GramTileCache:
+    """Make every row block touched by ``ridx`` resident (LRU-inserting on
+    miss).  After warming, read-only lookups over ``ridx`` are all hits —
+    provided ``capacity`` covers the working set (thrash is correct, just
+    slow; the counters expose it)."""
+    ridx = ridx.astype(jnp.int32)
+    L = max_blocks if max_blocks is not None \
+        else min(cache.n_blocks, ridx.shape[0])
+    ub = _padded_unique_blocks(ridx // cache.tile, L)
+
+    def step(cache, bid):
+        def real(cache):
+            cache, _ = _ensure_block(cache, base, x, bid, insert=True)
+            return cache
+
+        return jax.lax.cond(bid >= 0, real, lambda c: c, cache), None
+
+    cache, _ = jax.lax.scan(step, cache, ub)
+    return cache
+
+
+def lookup_rows(cache: GramTileCache, base: KernelFn, x: jax.Array,
+                ridx: jax.Array, cidx: Optional[jax.Array],
+                insert: bool = True,
+                max_blocks: Optional[int] = None):
+    """Cross-kernel block K(x[ridx], x[cidx]) served from the cache.
+
+    ``cidx=None`` returns full Gram rows, shape ``(len(ridx), n)``.
+    ``insert=True`` first warms the needed blocks (LRU inserts + counters);
+    ``insert=False`` is the read-through mode, leaving the cache untouched
+    (used by the functional :func:`repro.core.kernel_fns.kernel_cross`
+    adapter, which cannot return updated state).
+
+    After warming (or when already warm) the common case is *every* needed
+    block resident, served by a pure double gather with no block scan at
+    all; only when some block is absent — read-through misses, or LRU
+    thrash where the warm pass itself evicted an earlier needed block —
+    does the ``cond`` fall back to the per-block accumulate scan (correct,
+    slower; thrash strips recomputed there are not re-counted, so in the
+    eviction-free regime the miss counter is the exact kernel-eval count).
+    Returns ``(out, cache')``.
+    """
+    ridx = ridx.astype(jnp.int32)
+    tile = cache.tile
+    m = ridx.shape[0]
+    c = cache.n if cidx is None else cidx.shape[0]
+    blocks = ridx // tile
+    if insert:
+        cache = warm(cache, base, x, ridx, max_blocks)
+
+    present = cache.keys[None, :] == blocks[:, None]           # (m, C)
+    slots = jnp.argmax(present, axis=1)                        # (m,)
+    rel = ridx - blocks * tile
+
+    def fast(_):
+        rows = cache.store[slots, rel]                         # (m, n)
+        return rows if cidx is None else rows[:, cidx]
+
+    def slow(_):
+        L = max_blocks if max_blocks is not None \
+            else min(cache.n_blocks, m)
+        ub = _padded_unique_blocks(blocks, L)
+
+        def step(out, bid):
+            def real(out):
+                _, strip = _ensure_block(cache, base, x, bid, insert=False)
+                cols = strip if cidx is None else strip[:, cidx]
+                picked = cols[jnp.clip(ridx - bid * tile, 0, tile - 1)]
+                return jnp.where((blocks == bid)[:, None], picked, out)
+
+            return jax.lax.cond(bid >= 0, real, lambda o: o, out), None
+
+        out0 = jnp.zeros((m, c), cache.store.dtype)
+        out, _ = jax.lax.scan(step, out0, ub)
+        return out
+
+    out = jax.lax.cond(jnp.all(jnp.any(present, axis=1)), fast, slow,
+                       None)
+    return out, cache
+
+
+def stats(cache: GramTileCache) -> dict:
+    """Host-side counter snapshot (python ints) — serving / bench reporting.
+    ``evals`` is the *measured* kernel-evaluation count: every miss computes
+    one ``(tile, n)`` strip."""
+    hits = int(cache.hits)
+    misses = int(cache.misses)
+    return dict(
+        hits=hits, misses=misses, evictions=int(cache.evictions),
+        resident=int(jnp.sum(cache.keys >= 0)),
+        capacity=cache.capacity, tile=cache.tile, n_blocks=cache.n_blocks,
+        evals=misses * cache.tile * cache.n,
+        hit_rate=hits / max(hits + misses, 1))

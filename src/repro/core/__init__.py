@@ -12,12 +12,13 @@ Public API:
     metrics.{adjusted_rand_index, normalized_mutual_info}
 """
 from repro.core.kernel_fns import (  # noqa: F401
-    Gaussian, Laplacian, Linear, Polynomial, Precomputed,
+    Gaussian, Laplacian, Linear, Polynomial, Precomputed, diag_is_one,
     gamma_of, kernel_cross, kernel_diag, median_sq_dist_heuristic,
+    register_kernel,
 )
 from repro.core.minibatch import (  # noqa: F401
-    MBConfig, StepInfo, batch_objective, fit, fit_jit, make_step, predict,
-    sample_batch,
+    MBConfig, StepInfo, batch_objective, fit, fit_cached, fit_jit,
+    make_step, predict, sample_batch, sample_batch_nested,
 )
 from repro.core.engine import (  # noqa: F401
     EngineResult, MultiRestartEngine, fit_restarts,

@@ -35,7 +35,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.compat import shard_map
-from repro.core.kernel_fns import KernelFn, kernel_cross, kernel_diag
+from repro.core.kernel_fns import (
+    KernelFn, gram_rows_fn, kernel_cross, kernel_diag,
+)
 from repro.core.minibatch import MBConfig
 from repro.core.rates import get_rate
 from repro.core.state import CenterState
@@ -218,6 +220,21 @@ def _make_local_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
             new_sqnorm = part
             for ax in data_axes:
                 new_sqnorm = jax.lax.psum(new_sqnorm, ax)
+        elif gram_rows_fn(kernel) is not None:
+            # cached kernel: resolve all local support rows in ONE lookup
+            # outside the per-center vmap (a cached lookup under vmap
+            # lowers its cond to select and recomputes strips on hits),
+            # then gather each center's W x W block
+            rows_fn = gram_rows_fn(kernel)
+            rows = rows_fn(kernel, new_pts.reshape(k_loc * w, d))
+            rows_k = rows.reshape(k_loc, w, rows.shape[-1])
+            ids = new_pts[..., 0].astype(jnp.int32)            # (k_loc, W)
+
+            def sq_one(rows_j, ids_j, coef_row):
+                g = rows_j[:, ids_j]                           # (W, W)
+                return coef_row @ (g.astype(jnp.float32) @ coef_row)
+
+            new_sqnorm = jax.vmap(sq_one)(rows_k, ids, new_coef)
         else:
             # paper-faithful local Gram per center
             def sq_one(pts_row, coef_row):
@@ -357,6 +374,159 @@ def fit_distributed_jit(x: jax.Array, center_pts: jax.Array,
         return run_early_stopped(cfg, step_with_key, state, key)
 
     return run(state0, xs, key)
+
+
+# --------------------------------------------------------------------------
+# Per-shard Gram tile caches (repro.cache subsystem under the shard_map shim)
+#
+# In the cached distributed fit the dataset flows as (n, 1) index-data (the
+# CachedKernel convention, same as Precomputed), so locally sampled batch
+# rows carry their GLOBAL row ids — each data shard warms its own tile
+# cache with exactly the blocks its local samples touch ("shard-local
+# keys"), and the unchanged local Algorithm-2 step then serves every
+# cross-kernel block from resident tiles.  The caches are stacked on a
+# leading data-shard axis and ride the while_loop carry, so warmth persists
+# across the whole zero-host-sync fit.
+
+
+def init_shard_caches(mesh: Mesh, n: int, tile: int, capacity: int,
+                      data_axes: Sequence[str] = ("data",),
+                      dtype=jnp.float32):
+    """One empty GramTileCache per data shard, stacked on a leading axis
+    that is sharded over ``data_axes`` (replicated over 'model' — devices
+    along the model axis see the same batch rows, so their cache contents
+    evolve identically)."""
+    from repro.cache import tile_cache
+
+    data_axes = tuple(data_axes)
+    s = _data_shard_count(mesh, data_axes)
+    c0 = tile_cache.create_cache(n, tile, capacity, dtype)
+    stacked = jax.tree.map(
+        lambda a: jnp.tile(a[None], (s,) + (1,) * a.ndim), c0)
+    return jax.device_put(stacked, jax.tree.map(
+        lambda a: NamedSharding(mesh, P(data_axes, *([None] * (a.ndim - 1)))),
+        stacked))
+
+
+def make_cached_dist_sampling_step(base_kernel: KernelFn, x_real: jax.Array,
+                                   cfg: MBConfig, mesh: Mesh,
+                                   data_axes: Sequence[str] = ("data",),
+                                   model_axis: str = "model"):
+    """Cached variant of :func:`make_dist_sampling_step`: returns
+    step(state, caches, x_idx, key) -> (state, caches, info), where x_idx is
+    the (n, 1) index-data dataset row-sharded over ``data_axes`` and
+    ``caches`` the stacked per-shard tile caches of
+    :func:`init_shard_caches`.  ``base_kernel`` / ``x_real`` (the actual
+    coordinates) are closed over and replicated."""
+    from repro.cache import tile_cache
+    from repro.cache.cached_kernel import CachedKernel
+
+    if cfg.compute_dtype != "float32":
+        raise ValueError("cached distributed fit carries row indices as "
+                         "data; compute_dtype casts would corrupt them")
+    if cfg.sqnorm_mode != "recompute":
+        raise ValueError("cached distributed fit supports sqnorm_mode="
+                         "'recompute' (the sharded variant slices window "
+                         "rows inside per-center vmaps, which defeats the "
+                         "cache's cond-skip)")
+    data_axes = tuple(data_axes)
+    n_shards = _data_shard_count(mesh, data_axes)
+    if cfg.batch_size % n_shards:
+        raise ValueError(f"batch_size {cfg.batch_size} must divide over "
+                         f"{n_shards} data shards")
+    b_loc = cfg.batch_size // n_shards
+
+    def cached_sampled(state: DistState, caches, x_loc: jax.Array,
+                       key: jax.Array):
+        kb = jax.random.fold_in(key, _replica_index(mesh, data_axes))
+        bidx = jax.random.randint(kb, (b_loc,), 0, x_loc.shape[0],
+                                  dtype=jnp.int32)
+        xb_loc = x_loc[bidx]                       # (b_loc, 1) global ids
+        # Warm set = FULL batch + this shard's current window rows: the
+        # local step all_gathers the batch into the center windows, so
+        # window rows originate from every data shard — warming only the
+        # local slice would leave them missing on each sqnorm recompute.
+        ids_full = xb_loc[:, 0].astype(jnp.int32)
+        for ax in reversed(data_axes):
+            ids_full = jax.lax.all_gather(ids_full, ax, axis=0, tiled=True)
+        # windows are model-sharded: gather ALL centers' window ids so the
+        # warm set (and thus the cache contents, replicated over 'model')
+        # is identical on every device of a data shard
+        win_ids = jax.lax.all_gather(
+            state.pts[..., 0].reshape(-1).astype(jnp.int32), model_axis,
+            axis=0, tiled=True)
+        cache = jax.tree.map(lambda a: a[0], caches)
+        cache = tile_cache.warm(cache, base_kernel, x_real,
+                                jnp.concatenate([ids_full, win_ids]))
+        ck = CachedKernel(base=base_kernel, x=x_real, cache=cache)
+        local_step = _make_local_step(ck, cfg, mesh, data_axes, model_axis)
+        new_state, info = local_step(state, xb_loc)
+        return new_state, jax.tree.map(lambda a: a[None], cache), info
+
+    from repro.cache.tile_cache import GramTileCache
+
+    state_specs = _state_specs(model_axis)
+    info_specs = DistInfo(P(), P(), P(), P(model_axis))
+    # stacked cache ranks: store (S,C,tile,n); keys/stamp (S,C); scalars (S,)
+    cache_specs = GramTileCache(
+        store=P(data_axes, None, None, None), keys=P(data_axes, None),
+        stamp=P(data_axes, None), clock=P(data_axes), hits=P(data_axes),
+        misses=P(data_axes), evictions=P(data_axes))
+
+    return shard_map(
+        cached_sampled, mesh=mesh,
+        in_specs=(state_specs, cache_specs, P(data_axes, None), P()),
+        out_specs=(state_specs, cache_specs, info_specs),
+        check_rep=False)
+
+
+def fit_distributed_cached_jit(x: jax.Array, init_idx: jax.Array,
+                               base_kernel: KernelFn, cfg: MBConfig,
+                               mesh: Mesh, key: jax.Array,
+                               tile: int = 256, capacity: int = 16,
+                               data_axes: Sequence[str] = ("data",),
+                               model_axis: str = "model",
+                               cache_dtype=jnp.float32):
+    """Cached :func:`fit_distributed_jit`: same fully on-device
+    early-stopped loop (one compiled program, zero per-step host sync), but
+    every data shard carries a Gram tile cache in the while_loop state —
+    repeated rows across sampled batches stop re-evaluating the kernel.
+
+    ``x``: (n, d) real coordinates; ``init_idx``: (k,) initial center row
+    indices.  Sampling is identical to the uncached path (same fold_in /
+    randint stream), so trajectories are numerically equivalent.
+    Returns (state, caches, iters); ``repro.cache.stats`` on a
+    ``jax.tree.map(lambda a: a[s], caches)`` slice reports shard s's
+    hit/miss telemetry."""
+    from repro.cache.cached_kernel import make_cached
+    from repro.core.minibatch import run_early_stopped
+    from repro.core.state import window_size
+
+    data_axes = tuple(data_axes)
+    ck0, xi = make_cached(base_kernel, x, tile=tile, capacity=capacity,
+                          dtype=cache_dtype)
+    w = window_size(cfg.batch_size, cfg.tau)
+    center_data = xi[init_idx]                      # (k, 1) index-data
+    state0 = jax.device_put(init_dist_state(center_data, ck0, w),
+                            state_shardings(mesh, model_axis))
+    xs = shard_dataset(xi, mesh, data_axes)
+    caches0 = init_shard_caches(mesh, x.shape[0], tile, capacity,
+                                data_axes, cache_dtype)
+    step = make_cached_dist_sampling_step(
+        base_kernel, x, cfg, mesh, data_axes, model_axis)
+
+    @jax.jit
+    def run(state, caches, x_idx, key):
+        def step_with_key(carry, kb):
+            st, cc = carry
+            st, cc, info = step(st, cc, x_idx, kb)
+            return (st, cc), info.improvement
+
+        (state, caches), iters = run_early_stopped(
+            cfg, step_with_key, (state, caches), key)
+        return state, caches, iters
+
+    return run(state0, caches0, xs, key)
 
 
 def dist_to_center_state(dst: DistState) -> CenterState:

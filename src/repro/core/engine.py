@@ -31,12 +31,17 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.core import init as init_lib
-from repro.core.kernel_fns import KernelFn
+from repro.core.kernel_fns import KernelFn, diag_of
 from repro.core.minibatch import (
-    MBConfig, batch_objective, make_step, run_early_stopped, sample_batch,
-    sampled_step_with_key,
+    MBConfig, batch_objective, batch_objective_from_rows,
+    make_step, run_early_stopped, sample_batch, sampled_step_with_key,
 )
 from repro.core.state import CenterState, init_state, window_size
+
+# Auto-enable shared eval-Gram scoring while the (eb, n) row strip stays
+# under ~64 MB f32 — beyond that, per-restart recomputation is cheaper than
+# the memory.
+_SHARED_EVAL_GRAM_MAX_ELEMS = 16 * 2 ** 20
 
 
 class EngineResult(NamedTuple):
@@ -75,6 +80,7 @@ def fit_restarts(x: jax.Array, kernel: KernelFn, cfg: MBConfig,
                  mesh: Optional[Mesh] = None,
                  restart_axis: Optional[str] = None,
                  eval_batch_size: Optional[int] = None,
+                 share_eval_gram: Optional[bool] = None,
                  _run=None, _init_run=None) -> EngineResult:
     """Run R independent mini-batch kernel k-means fits in one compiled
     program and return the best (plus per-restart diagnostics).
@@ -108,15 +114,24 @@ def fit_restarts(x: jax.Array, kernel: KernelFn, cfg: MBConfig,
         (fit_keys, init_idx), (x, eval_idx) = restart_placements(
             mesh, ax, (fit_keys, init_idx), (x, eval_idx))
 
-    run = _run if _run is not None else make_restart_run(kernel, cfg)
+    run = _run if _run is not None \
+        else make_restart_run(kernel, cfg, share_eval_gram)
     return run(x, fit_keys, init_idx, eval_idx)
 
 
-def make_restart_run(kernel: KernelFn, cfg: MBConfig):
+def make_restart_run(kernel: KernelFn, cfg: MBConfig,
+                     share_eval_gram: Optional[bool] = None):
     """Build the jitted R-restart program: (x, fit_keys(R,2), init_idx(R,k),
     eval_idx(eb,)) -> EngineResult.  Kernel params are closed over (they are
     array pytrees, so they cannot be static jit args); callers that fit
-    repeatedly should cache the returned function — MultiRestartEngine does."""
+    repeatedly should cache the returned function — MultiRestartEngine does.
+
+    ``share_eval_gram``: score every restart from ONE precomputed
+    K(x_eval, x) row strip (a Gram-tile-cache-style reuse: the strip is
+    computed once and each restart's support cross block is a column
+    gather) instead of R independent cross-kernel evaluations.  Default
+    ``None`` auto-enables while the strip stays small (eb * n <=
+    ``_SHARED_EVAL_GRAM_MAX_ELEMS``)."""
     w = window_size(cfg.batch_size, cfg.tau)
     step = make_step(kernel, cfg)
 
@@ -129,8 +144,21 @@ def make_restart_run(kernel: KernelFn, cfg: MBConfig):
     def run(x, fit_keys, init_idx, eval_idx):
         states, iters = jax.vmap(
             lambda kk, ii: fit_one(x, kk, ii))(fit_keys, init_idx)
-        objs = jax.vmap(
-            lambda s: batch_objective(kernel, s, x, eval_idx))(states)
+        share = share_eval_gram
+        if share is None:
+            share = (x.shape[0] * eval_idx.shape[0]
+                     <= _SHARED_EVAL_GRAM_MAX_ELEMS)
+        if share:
+            from repro.core.kernel_fns import kernel_cross
+            xe = x[eval_idx]
+            gram_rows = kernel_cross(kernel, xe, x)        # (eb, n), once
+            diag_e = diag_of(kernel, xe)
+            objs = jax.vmap(
+                lambda s: batch_objective_from_rows(gram_rows, diag_e,
+                                                    s))(states)
+        else:
+            objs = jax.vmap(
+                lambda s: batch_objective(kernel, s, x, eval_idx))(states)
         best = jnp.argmin(objs).astype(jnp.int32)
         best_state = jax.tree.map(lambda a: a[best], states)
         return EngineResult(state=best_state, objective=objs[best],
@@ -150,7 +178,8 @@ class MultiRestartEngine:
                  mesh: Optional[Mesh] = None,
                  restart_axis: Optional[str] = None,
                  init: str = "kmeans++",
-                 eval_batch_size: Optional[int] = None):
+                 eval_batch_size: Optional[int] = None,
+                 share_eval_gram: Optional[bool] = None):
         if restarts < 1:
             raise ValueError("restarts must be >= 1")
         self.kernel = kernel
@@ -160,6 +189,7 @@ class MultiRestartEngine:
         self.restart_axis = restart_axis
         self.init = init
         self.eval_batch_size = eval_batch_size
+        self.share_eval_gram = share_eval_gram
         self.result: Optional[EngineResult] = None
         self._x: Optional[jax.Array] = None
         self._run = None       # compiled fit program cache
@@ -167,7 +197,8 @@ class MultiRestartEngine:
 
     def fit(self, x: jax.Array, key: jax.Array) -> EngineResult:
         if self._run is None:
-            self._run = make_restart_run(self.kernel, self.cfg)
+            self._run = make_restart_run(self.kernel, self.cfg,
+                                         self.share_eval_gram)
             self._init_run = make_init_run(self.kernel, self.cfg, self.init)
         self.result = fit_restarts(
             x, self.kernel, self.cfg, key, self.restarts, init=self.init,

@@ -50,6 +50,45 @@ class Precomputed(NamedTuple):
 
 KernelFn = Union[Gaussian, Laplacian, Polynomial, Linear, Precomputed]
 
+# Extension registry: packages outside core (e.g. repro.cache's CachedKernel)
+# register new kernel pytree types here so ``kernel_cross`` / ``kernel_diag``
+# dispatch to them — call sites throughout repro.core stay unchanged.
+_EXT_CROSS: dict = {}
+_EXT_DIAG: dict = {}
+_EXT_DIAG_ONE: dict = {}
+_EXT_ROWS: dict = {}
+
+
+def register_kernel(cls, *, cross, diag, diag_one=None,
+                    gram_rows=None) -> None:
+    """Register an out-of-module kernel type.
+
+    ``cross(k, x, y) -> (m, n)`` and ``diag(k, x) -> (m,)`` implement the
+    :func:`kernel_cross` / :func:`kernel_diag` contract; ``diag_one(k) ->
+    bool`` (optional, static) advertises K(x, x) == 1 for the normalized
+    fast path (:func:`diag_is_one`); ``gram_rows(k, x) -> (m, n)``
+    (optional) advertises cheap FULL Gram rows K(x_i, .) — the capability
+    hook the hot paths use to restructure per-center loops into one
+    row-resolve plus pure gathers (see :func:`gram_rows_fn`).  Keeping the
+    capability in this registry means repro.core never names extension
+    kernel types."""
+    _EXT_CROSS[cls] = cross
+    _EXT_DIAG[cls] = diag
+    if diag_one is not None:
+        _EXT_DIAG_ONE[cls] = diag_one
+    if gram_rows is not None:
+        _EXT_ROWS[cls] = gram_rows
+
+
+def gram_rows_fn(k: "KernelFn"):
+    """The registered ``gram_rows(k, x) -> (m, n)`` capability, or None.
+
+    Callers that would otherwise evaluate cross-kernels inside ``vmap``
+    (where a cached kernel's ``lax.cond`` lowers to ``select`` and the miss
+    branch runs on every hit) should resolve rows ONCE through this hook
+    outside the vmap and gather columns inside it."""
+    return _EXT_ROWS.get(type(k))
+
 
 def _sq_dists(x: jax.Array, y: jax.Array) -> jax.Array:
     """Pairwise squared Euclidean distances, (m, d) x (n, d) -> (m, n).
@@ -78,6 +117,8 @@ def kernel_cross(k: KernelFn, x: jax.Array, y: jax.Array) -> jax.Array:
         xi = x[:, 0].astype(jnp.int32)
         yi = y[:, 0].astype(jnp.int32)
         return k.gram[xi][:, yi]
+    if type(k) in _EXT_CROSS:
+        return _EXT_CROSS[type(k)](k, x, y)
     raise TypeError(f"unknown kernel {type(k)}")
 
 
@@ -92,7 +133,32 @@ def kernel_diag(k: KernelFn, x: jax.Array) -> jax.Array:
     if isinstance(k, Precomputed):
         xi = x[:, 0].astype(jnp.int32)
         return k.gram[xi, xi]
+    if type(k) in _EXT_DIAG:
+        return _EXT_DIAG[type(k)](k, x)
     raise TypeError(f"unknown kernel {type(k)}")
+
+
+def diag_is_one(k: KernelFn) -> bool:
+    """Static: does this kernel advertise K(x, x) == 1 for all x?
+
+    True for the normalized kernels (Gaussian / Laplacian: gamma = 1, the
+    paper's Table 1 setting).  Distance evaluations use it to substitute a
+    constant for the :func:`kernel_diag` pass — for cached / precomputed
+    kernels that skips a per-point Gram gather entirely."""
+    if isinstance(k, (Gaussian, Laplacian)):
+        return True
+    fn = _EXT_DIAG_ONE.get(type(k))
+    return bool(fn(k)) if fn is not None else False
+
+
+def diag_of(k: KernelFn, x: jax.Array) -> jax.Array:
+    """:func:`kernel_diag` with the normalized-kernel fast path: kernels
+    advertising ``diag == 1`` get a constant instead of a per-point pass —
+    for cached / precomputed kernels that skips a Gram gather entirely.
+    The single implementation shared by fit, serving and the engine."""
+    if diag_is_one(k):
+        return jnp.ones(x.shape[0], x.dtype)
+    return kernel_diag(k, x)
 
 
 def gamma_of(k: KernelFn, x: jax.Array) -> jax.Array:

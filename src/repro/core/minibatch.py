@@ -25,7 +25,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import init as init_lib
-from repro.core.kernel_fns import KernelFn, kernel_cross, kernel_diag
+from repro.core.kernel_fns import (
+    KernelFn, diag_of, gram_rows_fn, kernel_cross,
+)
 from repro.core.rates import get_rate
 from repro.core.state import CenterState, init_state, window_size
 
@@ -60,6 +62,13 @@ def _batch_center_dots(kernel: KernelFn, xb: jax.Array, x: jax.Array,
     k, w = idx.shape
     if use_pallas:
         from repro.kernels import ops as kops
+        rows_fn = gram_rows_fn(kernel)
+        if rows_fn is not None:
+            # gather-from-cache path: resolve the batch's full Gram rows
+            # once (hits skip kernel evals), then the Pallas kernel fuses
+            # the support-column gather with the coefficient contraction —
+            # zero kernel evaluations for resident rows.
+            return kops.cached_assign_dots(rows_fn(kernel, xb), idx, coef)
         return kops.fused_batch_center_dots(kernel, xb, x[idx.reshape(-1)],
                                             coef)
     sup = x[idx.reshape(-1)]                      # (k*W, d)
@@ -94,7 +103,24 @@ def _append_to_windows(idx, coef, head, alpha, bj, onehot, batch_idx):
 
 def _sqnorm_recompute(kernel, x, idx, coef):
     """Paper-faithful <C_j, C_j>: per-center W x W Gram quadratic form.
-    Empty slots (coef 0) contribute nothing."""
+    Empty slots (coef 0) contribute nothing.
+
+    Kernels advertising the ``gram_rows`` capability (cached kernels)
+    resolve all k*W support rows in ONE lookup outside the vmap and gather
+    the per-center W x W blocks inside it — a cached lookup placed under
+    the per-center vmap would lower its ``lax.cond`` to ``select`` and run
+    the miss branch (a full strip recompute) on every hit."""
+    rows_fn = gram_rows_fn(kernel)
+    if rows_fn is not None:
+        k, w = idx.shape
+        rows = rows_fn(kernel, x[idx.reshape(-1)])                 # (kW, n)
+        rows_k = rows.reshape(k, w, rows.shape[-1])
+
+        def one_cached(rows_j, idx_row, coef_row):
+            g = rows_j[:, idx_row]                                 # (W, W)
+            return coef_row @ (g.astype(jnp.float32) @ coef_row)
+
+        return jax.vmap(one_cached)(rows_k, idx, coef)
 
     def one(idx_row, coef_row):
         pts = x[idx_row]                                           # (W, d)
@@ -114,7 +140,7 @@ def make_step(kernel: KernelFn, cfg: MBConfig):
     def step(state: CenterState, x: jax.Array, batch_idx: jax.Array):
         k, w = state.idx.shape
         xb = x[batch_idx]                                          # (b, d)
-        diag_b = kernel_diag(kernel, xb)                           # (b,)
+        diag_b = diag_of(kernel, xb)                              # (b,)
 
         # ---- (2) assignment against current truncated centers -------------
         p = _batch_center_dots(kernel, xb, x, state.idx, state.coef,
@@ -202,8 +228,23 @@ def batch_objective(kernel: KernelFn, state: CenterState, x: jax.Array,
     engine can score every restart's centers on one SHARED eval batch
     (fair on-device model selection, no host sync).  vmap-safe over state."""
     xb = x[batch_idx]
-    diag_b = kernel_diag(kernel, xb)
+    diag_b = diag_of(kernel, xb)
     p = _batch_center_dots(kernel, xb, x, state.idx, state.coef, use_pallas)
+    dists = diag_b[:, None] - 2.0 * p + state.sqnorm[None, :]
+    return jnp.mean(jnp.min(dists, axis=1))
+
+
+def batch_objective_from_rows(gram_rows: jax.Array, diag_b: jax.Array,
+                              state: CenterState) -> jax.Array:
+    """``batch_objective`` from precomputed Gram rows K(x_B, x) (eb, n):
+    the cross-kernel block against each center's support window becomes a
+    column gather, so R restarts scored on one shared eval batch pay the
+    eb x n kernel evaluations ONCE instead of R times (engine.py).
+    vmap-safe over state."""
+    k, w = state.idx.shape
+    cross = gram_rows[:, state.idx.reshape(-1)]            # (eb, k*W)
+    p = jnp.einsum("bkw,kw->bk", cross.reshape(gram_rows.shape[0], k, w),
+                   state.coef)
     dists = diag_b[:, None] - 2.0 * p + state.sqnorm[None, :]
     return jnp.mean(jnp.min(dists, axis=1))
 
@@ -221,6 +262,37 @@ def sample_batch_weighted(key: jax.Array, probs: jax.Array,
     — Algorithm 2 itself is unchanged."""
     return jax.random.choice(key, probs.shape[0], (b,), p=probs) \
         .astype(jnp.int32)
+
+
+def sample_batch_nested(key: jax.Array, step, n: int, b: int,
+                        reuse: float = 0.5,
+                        refresh: int = 8) -> jax.Array:
+    """Nested batch sampling (Newling & Fleuret 2016 style reuse): the
+    first ``reuse * b`` positions form a slowly-refreshing prefix — position
+    ``i`` keeps its row for ``refresh`` steps (staggered, so ~m/refresh
+    rows turn over per step) — and the tail is drawn fresh each step.
+
+    Consecutive batches therefore share most of their rows, which is what
+    keeps the Gram tile cache's hit rate high during fit.  Marginally each
+    position is still uniform over [0, n).  Pure function of ``(key, step)``
+    like :func:`sample_batch` — deterministic resume needs no sampler
+    state."""
+    m = int(b * reuse)
+    step = jnp.asarray(step, jnp.int32)
+    if m > 0:
+        i = jnp.arange(m, dtype=jnp.int32)
+        epoch = (step + i) // refresh
+
+        def draw(ii, ee):
+            kk = jax.random.fold_in(jax.random.fold_in(key, ii), ee)
+            return jax.random.randint(kk, (), 0, n, dtype=jnp.int32)
+
+        head = jax.vmap(draw)(i, epoch)
+    else:
+        head = jnp.zeros((0,), jnp.int32)
+    kt = jax.random.fold_in(jax.random.fold_in(key, step), 0x7A11)
+    tail = jax.random.randint(kt, (b - m,), 0, n, dtype=jnp.int32)
+    return jnp.concatenate([head, tail])
 
 
 def fit(x: jax.Array, kernel: KernelFn, cfg: MBConfig, key: jax.Array,
@@ -264,6 +336,86 @@ def fit(x: jax.Array, kernel: KernelFn, cfg: MBConfig, key: jax.Array,
         if early_stop and imp < cfg.epsilon:
             break
     return state, history
+
+
+def fit_cached(x: jax.Array, kernel: KernelFn, cfg: MBConfig, key: jax.Array,
+               tile: int = 256, capacity: int = 16,
+               init: str = "kmeans++", early_stop: bool = True,
+               init_idx: Optional[jax.Array] = None,
+               sampler: str = "uniform", reuse: float = 0.5,
+               refresh: int = 8, store_dtype=jnp.float32):
+    """Cache-accelerated host-driven fit (the Gram-tile-cache fit path).
+
+    Per iteration: warm the tile cache with the batch + window rows (only
+    MISSING row blocks evaluate the kernel; the nested sampler keeps that
+    set small), then run the unchanged Algorithm-2 step on the index-data
+    view — every ``kernel_cross`` inside it is served from resident tiles.
+
+    ``sampler='uniform'`` draws the exact batch sequence of :func:`fit`
+    (same key handling), so cached and uncached fits are numerically
+    equivalent; ``sampler='nested'`` uses :func:`sample_batch_nested` for
+    higher hit rates.  Returns ``(state, history, ck)`` — the returned
+    :class:`repro.cache.CachedKernel` carries the warm tiles plus measured
+    hit/miss/eviction counters, and serves ``predict`` /
+    ``predict_cached`` directly.
+    """
+    from repro import cache as cache_lib
+
+    n = x.shape[0]
+    if init_idx is None:
+        kinit, key = jax.random.split(key)
+        if init == "kmeans++":
+            init_idx = init_lib.kmeans_plus_plus(kinit, x, cfg.k, kernel)
+        elif init == "random":
+            init_idx = init_lib.random_init(kinit, n, cfg.k)
+        else:
+            raise ValueError(init)
+    if sampler not in ("uniform", "nested"):
+        raise ValueError(sampler)
+    if cfg.sqnorm_mode != "recompute" or cfg.eval_mode != "direct":
+        # the incremental/delta variants evaluate cross-kernels inside
+        # per-center vmaps, where cached lookups degrade to select (both
+        # branches run) — correct but strictly slower than uncached
+        raise ValueError("fit_cached supports the paper-faithful "
+                         "sqnorm_mode='recompute' / eval_mode='direct' "
+                         "(per-center vmapped kernel evals defeat the "
+                         "cache's cond-skip)")
+
+    ck, xi = cache_lib.make_cached(kernel, x, tile=tile, capacity=capacity,
+                                   dtype=store_dtype)
+    w = window_size(cfg.batch_size, cfg.tau)
+    state = init_state(xi, init_idx, ck, w)
+    nested_key = key
+
+    def _cached_step(state, cache, xr, xi, batch_idx):
+        # only (state, cache) are donated — the dataset and base kernel
+        # buffers stay owned by the caller
+        need = jnp.concatenate([batch_idx.astype(jnp.int32),
+                                state.idx.reshape(-1)])
+        from repro.cache.tile_cache import warm
+        cache = warm(cache, kernel, xr, need)
+        ck_t = cache_lib.CachedKernel(base=kernel, x=xr, cache=cache)
+        st, info = make_step(ck_t, cfg)(state, xi, batch_idx)
+        return st, cache, info
+
+    step = jax.jit(_cached_step, donate_argnums=(0, 1))
+
+    cache = ck.cache
+    history = []
+    for i in range(cfg.max_iters):
+        if sampler == "uniform":
+            key, kb = jax.random.split(key)
+            bidx = sample_batch(kb, n, cfg.batch_size)
+        else:
+            bidx = sample_batch_nested(nested_key, i, n, cfg.batch_size,
+                                       reuse=reuse, refresh=refresh)
+        state, cache, info = step(state, cache, x, xi, bidx)
+        imp = float(info.improvement)
+        history.append(dict(step=i, f_before=float(info.f_before),
+                            f_after=float(info.f_after), improvement=imp))
+        if early_stop and imp < cfg.epsilon:
+            break
+    return state, history, ck._replace(cache=cache)
 
 
 def run_early_stopped(cfg: MBConfig, step_with_key, state, key: jax.Array):
@@ -323,7 +475,7 @@ def assign_chunked(kernel: KernelFn, coef: jax.Array, sqnorm: jax.Array,
     def one_chunk(xc):
         cross = kernel_cross(kernel, xc, sup).reshape(xc.shape[0], k, w)
         p = jnp.einsum("bkw,kw->bk", cross, coef)
-        d = kernel_diag(kernel, xc)[:, None] - 2.0 * p + sqnorm[None, :]
+        d = diag_of(kernel, xc)[:, None] - 2.0 * p + sqnorm[None, :]
         return jnp.argmin(d, axis=1).astype(jnp.int32)
 
     nq = xq.shape[0]

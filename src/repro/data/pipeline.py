@@ -56,16 +56,43 @@ class EmbedPipeline:
 
 class ClusterBatchPipeline:
     """(b, d) point batches for the distributed clustering service —
-    uniform-with-replacement sampling from a host-resident dataset, keyed
-    by step (the paper's sampling model, resumable)."""
+    sampling from a host-resident dataset, keyed by step (resumable: every
+    batch is a pure function of (seed, step), so restoring a checkpoint's
+    step counter continues the stream exactly).
 
-    def __init__(self, x: np.ndarray, batch: int, seed: int = 0):
+    ``mode='iid'`` is the paper's uniform-with-replacement model.
+    ``mode='nested'`` mirrors ``repro.core.minibatch.sample_batch_nested``
+    (Newling & Fleuret-style reuse): the first ``reuse * batch`` positions
+    refresh only every ``refresh`` steps (staggered by position), the tail
+    is fresh each step — consecutive batches share most rows, which keeps
+    the Gram tile cache (repro.cache) hot in the serving/fit loop.
+    Marginally each position is still uniform over the dataset."""
+
+    def __init__(self, x: np.ndarray, batch: int, seed: int = 0,
+                 mode: str = "iid", reuse: float = 0.5, refresh: int = 8):
+        if mode not in ("iid", "nested"):
+            raise ValueError(mode)
         self.x, self.batch, self.seed = np.asarray(x), batch, seed
+        self.mode, self.reuse, self.refresh = mode, reuse, refresh
+
+    def batch_indices(self, step: int) -> np.ndarray:
+        """The (b,) row indices of batch ``step`` — pure in (seed, step)."""
+        n = self.x.shape[0]
+        if self.mode == "iid":
+            rng = np.random.default_rng((self.seed, step))
+            return rng.integers(0, n, self.batch)
+        m = int(self.batch * self.reuse)
+        head = np.empty((m,), np.int64)
+        for i in range(m):
+            epoch = (step + i) // self.refresh
+            head[i] = np.random.default_rng(
+                (self.seed, i, epoch)).integers(0, n)
+        tail = np.random.default_rng((self.seed, step, 0x7A11)) \
+            .integers(0, n, self.batch - m)
+        return np.concatenate([head, tail])
 
     def __call__(self, step: int):
-        rng = np.random.default_rng((self.seed, step))
-        idx = rng.integers(0, self.x.shape[0], self.batch)
-        return self.x[idx]
+        return self.x[self.batch_indices(step)]
 
     def __iter__(self):
         step = 0

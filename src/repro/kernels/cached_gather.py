@@ -1,0 +1,77 @@
+"""Pallas kernel: assignment dots from cache-resolved Gram rows.
+
+Computes   P[i, j] = sum_w coef[j, w] * rows[i, sup_ids[j, w]]
+where ``rows`` are the batch's Gram rows K(x_B, x) already resolved through
+the Gram tile cache (repro.cache) — so the assignment step of Algorithm 2
+performs ZERO kernel evaluations: this kernel fuses the support-column
+gather with the coefficient contraction, never materializing the
+(b, k*W) cross block in HBM.
+
+TPU mapping (mirrors fused_assign.py):
+* grid = (k, b/bt, W/st); the innermost axis streams support-id tiles.
+* Each step: gather a (bt, st) sub-block out of the resident (bt, n) row
+  tile with a dynamic column take, then contract with the (st,) coefficient
+  slice into the (bt, 1) output block.
+* VMEM working set per step: bt*n (row tile) + bt*st + st floats — the row
+  tile dominates; bt=128 x n=8192 f32 = 4 MB, inside the ~16 MB budget.
+
+The dynamic minor-dimension gather is interpret-mode-verified on CPU (the
+repo's convention, tests/test_pallas_kernels.py); TPU-native tuning rides
+the existing "TPU-native validation" roadmap item.  Pad slots (coef == 0)
+gather column 0 harmlessly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_body(rows_ref, ids_ref, coef_ref, out_ref):
+    iw = pl.program_id(2)
+
+    @pl.when(iw == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    r = rows_ref[...].astype(jnp.float32)       # (bt, n)
+    ci = ids_ref[0]                             # (st,) int32 column ids
+    sub = jnp.take(r, ci, axis=1)               # (bt, st) dynamic gather
+    c = coef_ref[0].astype(jnp.float32)         # (st,)
+    out_ref[:, 0] += sub @ c
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "st", "interpret"))
+def cached_assign_dots_pallas(rows: jax.Array, sup_ids: jax.Array,
+                              coef: jax.Array, *, bt: int = 128,
+                              st: int = 128,
+                              interpret: bool = False) -> jax.Array:
+    """rows: (b, n) f32; sup_ids: (k, W) int32; coef: (k, W) -> P (b, k)."""
+    b, n = rows.shape
+    k, w = coef.shape
+
+    bp = -b % bt
+    wp = -w % st
+    rows_p = jnp.pad(rows, ((0, bp), (0, 0)))
+    ids_p = jnp.pad(sup_ids.astype(jnp.int32), ((0, 0), (0, wp)))
+    coef_p = jnp.pad(coef, ((0, 0), (0, wp)))
+
+    bb = rows_p.shape[0]
+    ww = ids_p.shape[1]
+    grid = (k, bb // bt, ww // st)
+
+    out = pl.pallas_call(
+        _gather_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda j, ib, iw: (ib, 0)),
+            pl.BlockSpec((1, st), lambda j, ib, iw: (j, iw)),
+            pl.BlockSpec((1, st), lambda j, ib, iw: (j, iw)),
+        ],
+        out_specs=pl.BlockSpec((bt, 1), lambda j, ib, iw: (ib, j)),
+        out_shape=jax.ShapeDtypeStruct((bb, k), jnp.float32),
+        interpret=interpret,
+    )(rows_p, ids_p, coef_p)
+    return out[:b]

@@ -15,6 +15,7 @@ from repro.core.kernel_fns import (
     Gaussian, KernelFn, Linear, Polynomial,
 )
 from repro.kernels import ref
+from repro.kernels.cached_gather import cached_assign_dots_pallas
 from repro.kernels.fused_assign import fused_batch_center_dots_pallas
 from repro.kernels.kernel_matmul import kernel_matmul_pallas
 
@@ -65,6 +66,21 @@ def fused_batch_center_dots(kernel: KernelFn, xb: jax.Array,
     return fused_batch_center_dots_pallas(
         xb, sup, coef, kind=kind, p0=p0, p1=p1, p2=p2, bt=bt, st=st,
         interpret=interpret)
+
+
+def cached_assign_dots(rows: jax.Array, sup_ids: jax.Array,
+                       coef: jax.Array, bt: int = 128, st: int = 128,
+                       interpret=None) -> jax.Array:
+    """P[i,j] = sum_w coef[j,w] rows[i, sup_ids[j,w]] — the assignment
+    contraction over cache-resolved Gram rows (no kernel evaluations; the
+    gather-from-cache tile kernel of the repro.cache subsystem)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if interpret:
+        bt = _clamp_tile(bt, rows.shape[0], 8)
+        st = _clamp_tile(st, coef.shape[1], 8)
+    return cached_assign_dots_pallas(rows, sup_ids, coef, bt=bt, st=st,
+                                     interpret=interpret)
 
 
 def kernel_matmul(kernel: KernelFn, x: jax.Array, y: jax.Array,

@@ -21,6 +21,18 @@ def batch_center_dots(kernel: KernelFn, xb: jax.Array, sup: jax.Array,
     return jnp.einsum("bkw,kw->bk", cross.reshape(b, k, w), coef)
 
 
+def cached_assign_dots(rows: jax.Array, sup_ids: jax.Array,
+                       coef: jax.Array) -> jax.Array:
+    """P[i,j] = sum_w coef[j,w] * rows[i, sup_ids[j,w]].
+
+    rows: (b, n) resolved Gram rows; sup_ids: (k, W) int32; coef: (k, W).
+    """
+    b = rows.shape[0]
+    k, w = coef.shape
+    gathered = rows[:, sup_ids.reshape(-1)]          # (b, k*W)
+    return jnp.einsum("bkw,kw->bk", gathered.reshape(b, k, w), coef)
+
+
 def kernel_matmul(kernel: KernelFn, x: jax.Array, y: jax.Array,
                   v: jax.Array) -> jax.Array:
     """(K(x, y) @ v): x (n, d), y (m, d), v (m, c) -> (n, c).

@@ -104,6 +104,82 @@ def serve_cluster(args):
     print("cluster sizes:", jnp.bincount(pred, length=args.k).tolist())
 
 
+def serve_cluster_cached(args):
+    """Serving demo for the Gram tile cache subsystem (repro.cache):
+
+    fit with the nested sampler warming a device-resident tile cache, then
+    serve repeated-row query batches through ``predict_cached`` — the
+    hit/miss/eviction counters are the measured kernel-evaluation telemetry
+    (every miss = tile x n evaluations; hits are pure gathers).
+
+    ``--cache-mode precomputed`` swaps the LRU for the full-Gram fast path
+    (PrecomputedGram) — the right call when n^2 fits on device."""
+    from repro.cache import as_kernel, precompute_gram, predict_cached, stats
+    from repro.core import Gaussian, MBConfig, predict
+    from repro.core.minibatch import fit_cached
+    from repro.data import blobs
+
+    x, _ = blobs(n=args.n, d=args.d, k=args.k, seed=args.seed)
+    x = jnp.asarray(x)
+    kern = Gaussian(kappa=jnp.float32(1.0))
+    cfg = MBConfig(k=args.k, batch_size=args.batch_size, tau=args.tau,
+                   max_iters=args.max_iters, epsilon=-1.0)
+
+    if args.cache_mode == "precomputed":
+        t0 = time.time()
+        pk, xi = as_kernel(precompute_gram(kern, x))
+        jax.block_until_ready(pk.gram)
+        print(f"precomputed Gram: n={args.n} in "
+              f"{(time.time() - t0) * 1e3:.1f} ms "
+              f"({args.n * args.n} kernel evals, once)")
+        from repro.core import fit
+        t0 = time.time()
+        state, hist = fit(xi, pk, cfg, jax.random.PRNGKey(args.seed),
+                          early_stop=False)
+        print(f"fullbatch-Gram fit: {len(hist)} iters in "
+              f"{(time.time() - t0) * 1e3:.1f} ms (0 further kernel evals)")
+        xq = jnp.tile(xi, (-(-args.queries // args.n), 1))[:args.queries]
+        t0 = time.time()
+        pred = predict(state, xi, xq, pk, chunk=4096)
+        pred.block_until_ready()
+        t_pred = time.time() - t0
+        print(f"serve: {xq.shape[0]} queries in {t_pred * 1e3:.1f} ms "
+              f"({xq.shape[0] / max(t_pred, 1e-9):.0f} assignments/s)")
+        print("cluster sizes:", jnp.bincount(pred, length=args.k).tolist())
+        return
+
+    t0 = time.time()
+    state, hist, ck = fit_cached(
+        x, kern, cfg, jax.random.PRNGKey(args.seed),
+        tile=args.cache_tile, capacity=args.cache_capacity,
+        sampler="nested", early_stop=False)
+    jax.block_until_ready(state.sqnorm)
+    t_fit = time.time() - t0
+    s = stats(ck.cache)
+    print(f"cached fit: {len(hist)} iters in {t_fit * 1e3:.1f} ms — "
+          f"hits {s['hits']} misses {s['misses']} "
+          f"evictions {s['evictions']} "
+          f"(hit rate {s['hit_rate']:.2%}, {s['evals']} kernel evals)")
+
+    # repeated-row query stream: the serving regime the cache targets
+    qidx = jnp.tile(jnp.arange(args.n, dtype=jnp.int32),
+                    -(-args.queries // args.n))[:args.queries]
+    pred, ck = predict_cached(ck, state, qidx, chunk=4096)  # warm compile
+    pred.block_until_ready()
+    before = stats(ck.cache)
+    t0 = time.time()
+    pred, ck = predict_cached(ck, state, qidx, chunk=4096)
+    pred.block_until_ready()
+    t_pred = time.time() - t0
+    after = stats(ck.cache)
+    print(f"serve: {qidx.shape[0]} queries in {t_pred * 1e3:.1f} ms "
+          f"({qidx.shape[0] / max(t_pred, 1e-9):.0f} assignments/s) — "
+          f"+{after['hits'] - before['hits']} hits "
+          f"+{after['misses'] - before['misses']} misses "
+          f"(lifetime hit rate {after['hit_rate']:.2%})")
+    print("cluster sizes:", jnp.bincount(pred, length=args.k).tolist())
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -123,8 +199,19 @@ def main():
     ap.add_argument("--batch-size", type=int, default=256)
     ap.add_argument("--tau", type=int, default=128)
     ap.add_argument("--max-iters", type=int, default=40)
+    # Gram tile cache serving demo (repro.cache)
+    ap.add_argument("--cache", action="store_true",
+                    help="serve through the Gram tile cache with hit/miss/"
+                         "eviction counters (implies --cluster)")
+    ap.add_argument("--cache-mode", choices=["lru", "precomputed"],
+                    default="lru")
+    ap.add_argument("--cache-tile", type=int, default=512)
+    ap.add_argument("--cache-capacity", type=int, default=16)
     args = ap.parse_args()
 
+    if args.cache:
+        serve_cluster_cached(args)
+        return
     if args.cluster:
         serve_cluster(args)
         return

@@ -1,0 +1,50 @@
+"""Hypothesis property tests for the Gram tile cache — cached vs direct
+cross-kernel equivalence across kernels / tile sizes / capacities, plus the
+LRU structural invariants.  Separate module so the importorskip degrades
+only these (test_cache.py stays hypothesis-free, like test_engine.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests; suite degrades, not errors
+from hypothesis import given, settings, strategies as st
+
+from repro.cache import cross_update, make_cached, stats
+from repro.core.kernel_fns import (
+    Gaussian, Laplacian, Linear, Polynomial, kernel_cross,
+)
+
+KERNELS = [
+    Gaussian(kappa=jnp.float32(1.7)),
+    Laplacian(kappa=jnp.float32(2.3)),
+    Polynomial(bias=jnp.float32(1.0), scale=jnp.float32(4.0), degree=2),
+    Linear(),
+]
+
+
+def _data(n, d, seed):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=(n, d)),
+                       jnp.float32)
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 3), st.sampled_from([4, 8, 16]),
+       st.integers(1, 6), st.integers(1, 40), st.integers(0, 2 ** 31 - 1))
+def test_cached_cross_equivalence_property(kidx, tile, capacity, m, seed):
+    kern = KERNELS[kidx]
+    n = 48
+    x = _data(n, 4, seed=seed % 7)
+    ck, xi = make_cached(kern, x, tile=tile, capacity=capacity)
+    rng = np.random.default_rng(seed)
+    ridx = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+    cidx = jnp.asarray(rng.integers(0, n, max(m // 2, 1)), jnp.int32)
+    got, ck = cross_update(ck, xi[ridx], xi[cidx])
+    want = kernel_cross(kern, x[ridx], x[cidx])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    # LRU invariants: resident keys unique + within capacity + valid ids
+    keys = np.asarray(ck.cache.keys)
+    resident = keys[keys >= 0]
+    assert len(resident) <= capacity
+    assert len(set(resident.tolist())) == len(resident)
+    assert (resident < n // tile).all()
+    s = stats(ck.cache)
+    assert s["hits"] + s["misses"] >= 1
