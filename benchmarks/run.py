@@ -103,10 +103,13 @@ def bench_n_independence(fast: bool):
 
 # ----------------------------------------------------------------- quality
 def _mb_fit_ari(xj, kern, k, b, tau, rate, y, seed, iters=80):
-    cfg = MBConfig(k=k, batch_size=b, tau=tau, rate=rate, max_iters=iters,
-                   epsilon=-1.0)
-    st, _ = fit(xj, kern, cfg, jax.random.PRNGKey(seed), early_stop=False)
-    pred = np.asarray(predict(st, xj, xj, kern))
+    from repro.api import KernelKMeans, SolverConfig
+
+    cfg = SolverConfig(k=k, batch_size=b, tau=tau, rate=rate,
+                       max_iters=iters, epsilon=-1.0, kernel=kern,
+                       cache="none", distribution="single", jit=False)
+    est = KernelKMeans(cfg).fit(xj, key=jax.random.PRNGKey(seed))
+    pred = np.asarray(est.predict(xj))
     return (adjusted_rand_index(y, pred), normalized_mutual_info(y, pred))
 
 
@@ -211,15 +214,18 @@ def bench_gamma_table(fast: bool):
 
 def bench_termination(fast: bool):
     """Thm 1(2): iterations to early-stop scale ~ 1/epsilon (gamma = 1)."""
+    from repro.api import KernelKMeans, SolverConfig
+
     x, _ = blobs(n=4000, d=16, k=8, seed=0)
     xj = jnp.asarray(x)
     for eps in [0.04, 0.02, 0.01, 0.005]:
         iters = []
         for s in range(2 if fast else 3):
-            cfg = MBConfig(k=8, batch_size=512, tau=200, epsilon=eps,
-                           max_iters=400)
-            _, hist = fit(xj, GAUSS, cfg, jax.random.PRNGKey(s))
-            iters.append(len(hist))
+            cfg = SolverConfig(k=8, batch_size=512, tau=200, epsilon=eps,
+                               max_iters=400, kernel=GAUSS, cache="none",
+                               distribution="single", jit=False)
+            est = KernelKMeans(cfg).fit(xj, key=jax.random.PRNGKey(s))
+            iters.append(len(est.history_))
         print(f"termination_eps{eps},,iters={np.mean(iters):.1f}")
 
 
@@ -414,10 +420,86 @@ def bench_kernel_cache(fast: bool):
     print(f"kernel_cache_reduction,,{reduction:.1f}x_fewer_kernel_evals")
 
 
+# ------------------------------------------------------------- api overhead
+def bench_api_overhead(fast: bool):
+    """Estimator-vs-direct parity: KernelKMeans dispatch must resolve at
+    trace time, so a repeat `fit` through the estimator (compiled program
+    cached on the executor) costs the same as invoking a hand-built jitted
+    while_loop — zero per-step Python overhead.  Also reports the legacy
+    fit_jit per-call cost (which re-traces every invocation) for contrast.
+    """
+    import warnings
+
+    from repro.api import KernelKMeans, SolverConfig
+    from repro.core.minibatch import (
+        make_step, run_early_stopped, sampled_step_with_key)
+    from repro.core.state import init_state, window_size
+
+    n = 2048 if fast else 4096
+    k, b, tau, d = 8, 128, 64, 16
+    iters, reps = 25, 3 if fast else 6
+    x, _ = blobs(n=n, d=d, k=k, seed=0)
+    x = jnp.asarray(x)
+    mb = MBConfig(k=k, batch_size=b, tau=tau, max_iters=iters, epsilon=-1.0)
+    init_idx = jnp.arange(k, dtype=jnp.int32) * (n // k)
+    key = jax.random.PRNGKey(0)
+
+    # direct baseline: hand-built compiled loop, traced once
+    w = window_size(b, tau)
+    step = make_step(GAUSS, mb)
+
+    @jax.jit
+    def direct(x, init_idx, key):
+        state0 = init_state(x, init_idx, GAUSS, w)
+        return run_early_stopped(mb, sampled_step_with_key(step, x, mb),
+                                 state0, key)
+
+    jax.block_until_ready(direct(x, init_idx, key)[0].sqnorm)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(direct(x, init_idx, key)[0].sqnorm)
+    t_direct = (time.perf_counter() - t0) / reps
+
+    # estimator: same plan point, compiled program cached on the executor
+    est = KernelKMeans(SolverConfig(
+        k=k, batch_size=b, tau=tau, max_iters=iters, epsilon=-1.0,
+        kernel=GAUSS, cache="none", distribution="single", jit=True))
+    est.fit(x, key, init_idx=init_idx)                        # compile
+    jax.block_until_ready(est.state_.sqnorm)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        est.fit(x, key, init_idx=init_idx)
+        jax.block_until_ready(est.state_.sqnorm)
+    t_est = (time.perf_counter() - t0) / reps
+
+    # legacy fit_jit: pays a re-trace on every call (the cost the
+    # estimator's cached executor removes)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.core import fit_jit
+        jax.block_until_ready(
+            fit_jit(x, GAUSS, mb, key, init_idx)[0].sqnorm)
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            fit_jit(x, GAUSS, mb, key, init_idx)[0].sqnorm)
+        t_legacy = time.perf_counter() - t0
+
+    ratio = t_est / t_direct
+    print(f"api_overhead_direct,{t_direct * 1e6:.0f},compiled_loop")
+    print(f"api_overhead_estimator,{t_est * 1e6:.0f},"
+          f"{ratio:.2f}x_vs_direct")
+    print(f"api_overhead_legacy_fit_jit,{t_legacy * 1e6:.0f},"
+          f"{t_legacy / t_direct:.2f}x_vs_direct (per-call retrace)")
+    assert ratio < 1.5, (
+        f"estimator dispatch overhead {ratio:.2f}x vs direct compiled "
+        "call — plan dispatch must resolve at trace time")
+
+
 BENCHES = {
     "speedup": bench_speedup,
     "multi_restart": bench_multi_restart,
     "kernel_cache": bench_kernel_cache,
+    "api_overhead": bench_api_overhead,
     "n_independence": bench_n_independence,
     "quality": bench_quality,
     "tau_sweep": bench_tau_sweep,

@@ -1,6 +1,7 @@
 """Cluster LM hidden states with the distributed mini-batch kernel k-means
 service — the framework's first-class integration of the paper's technique
-(DESIGN.md §6): here, pseudo-labeling HuBERT-style audio features.
+(DESIGN.md §6): here, pseudo-labeling HuBERT-style audio features through
+the sharded ``KernelKMeans`` plan.
 
     PYTHONPATH=src python examples/cluster_embeddings.py
     # multi-device (simulated):
@@ -11,27 +12,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import KernelKMeans, SolverConfig
 from repro.configs import get_config
-from repro.core import Gaussian, MBConfig, median_sq_dist_heuristic
-from repro.core.distributed import cluster_hidden_states
+from repro.core import median_sq_dist_heuristic
 from repro.models import forward_train, init_params
-from repro.models.common import rms_norm
 
 # a reduced hubert-style encoder produces the features we cluster
 cfg = get_config("hubert-xlarge").reduced(dtype="float32")
 params = init_params(cfg, jax.random.PRNGKey(0))
 
 
-def hidden_state_stream(n_batches=40, batch=4, seq=64):
-    """Stream of (tokens, hidden-state) batches from the encoder."""
+def hidden_states(n_batches=40, batch=4, seq=64):
+    """(B*S, D) hidden-state features from the encoder."""
+    feats = []
     for i in range(n_batches):
         key = jax.random.fold_in(jax.random.PRNGKey(42), i)
         frames = jax.random.normal(key, (batch, seq, cfg.frontend_dim))
-        # take pre-head hidden states as features (B*S, D)
         logits = forward_train(params, cfg, {"embeds": frames})
         del logits  # features below; logits shown for the full path
         h = frames @ params["frontend_w"]         # frontend projection
-        yield np.asarray(h.reshape(-1, cfg.d_model))
+        feats.append(np.asarray(h.reshape(-1, cfg.d_model)))
+    return np.concatenate(feats, axis=0)
 
 
 if len(jax.devices()) > 1:
@@ -39,17 +40,25 @@ if len(jax.devices()) > 1:
 else:
     mesh = jax.make_mesh((1, 1), ("data", "model"))
 
-first = next(hidden_state_stream(1))
-kappa = float(median_sq_dist_heuristic(jnp.asarray(first)))
-kern = Gaussian(kappa=jnp.float32(kappa))
-mb = MBConfig(k=8, batch_size=first.shape[0], tau=128, epsilon=1e-4,
-              max_iters=30)
+# deliberately a NON-divisible row count: the estimator pads the dataset
+# over the data shards and masks the pad rows out of the shard-local
+# samplers (no synthetic point ever enters a batch) — this was a hard
+# ValueError on the legacy fit_distributed_jit surface.
+feats = hidden_states()[:-3]
+kappa = float(median_sq_dist_heuristic(jnp.asarray(feats[:1024])))
 
-state, hist = cluster_hidden_states(
-    hidden_state_stream(), k=8, kernel=kern, cfg=mb, mesh=mesh)
-print(f"devices={len(jax.devices())} mesh={dict(mesh.shape)}")
-print(f"clustered hidden states into k=8 pseudo-labels; "
-      f"{len(hist)} iterations")
-print(f"objective {hist[0]['f_before']:.4f} -> {hist[-1]['f_after']:.4f}")
+est = KernelKMeans(
+    SolverConfig(k=8, batch_size=256, tau=128, epsilon=1e-4, max_iters=30,
+                 kernel="rbf", kernel_params={"kappa": kappa},
+                 distribution="sharded", cache="none", jit=True),
+    mesh=mesh)
+est.fit(jnp.asarray(feats), key=0)
+
+print(f"devices={len(jax.devices())} mesh={dict(mesh.shape)} "
+      f"plan={est.plan_.name}")
+print(f"clustered {feats.shape[0]} hidden states into k=8 pseudo-labels; "
+      f"{int(est.iters_)} iterations (fully on-device while_loop)")
+labels = est.predict(jnp.asarray(feats[:4096]))
+print("pseudo-label histogram:", jnp.bincount(labels, length=8).tolist())
 print("per-center window fill:", np.asarray(
-    (state.coef > 0).sum(axis=1)).tolist())
+    (est.state_.coef > 0).sum(axis=1)).tolist())

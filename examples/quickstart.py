@@ -4,15 +4,16 @@
 
 Plain k-means cannot separate two concentric circles; kernel k-means with a
 graph heat kernel nails it — and the mini-batch algorithm (the paper's
-contribution) does so while touching only b points per iteration.
+contribution) does so while touching only b points per iteration.  Every
+execution strategy is one ``SolverConfig`` point behind the single
+``KernelKMeans`` front door (docs/api.md).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    MBConfig, adjusted_rand_index, fit, gamma_of, predict,
-)
+from repro.api import KernelKMeans, SolverConfig
+from repro.core import adjusted_rand_index, gamma_of
 from repro.core.lloyd import kmeans_fit
 from repro.data import circles
 from repro.data.graph_kernels import heat_kernel
@@ -24,37 +25,51 @@ _, assign_plain, _ = kmeans_fit(jnp.asarray(x), 2, jax.random.PRNGKey(0))
 print(f"plain k-means      ARI = "
       f"{adjusted_rand_index(y, np.asarray(assign_plain)):.3f}")
 
-# 2) truncated mini-batch kernel k-means (Algorithm 2)
+# 2) truncated mini-batch kernel k-means (Algorithm 2) through the
+#    estimator: the heat kernel is a Precomputed pytree, so the "data" is
+#    its (n, 1) index view xi
 kern, xi = heat_kernel(x, k=10, t=2000.0)
 kern = jax.tree.map(jnp.asarray, kern)
 xi = jnp.asarray(xi)
 print(f"heat-kernel gamma  = {float(gamma_of(kern, xi)):.4f}  (<< 1, "
       "so Theorem 1 allows a tiny batch)")
 
-cfg = MBConfig(k=2, batch_size=256, tau=200, epsilon=1e-4, max_iters=200)
-state, hist = fit(xi, kern, cfg, jax.random.PRNGKey(0))
-pred = np.asarray(predict(state, xi, xi, kern))
+cfg = SolverConfig(k=2, batch_size=256, tau=200, epsilon=1e-4,
+                   max_iters=200, kernel=kern, cache="none",
+                   distribution="single", jit=False)
+est = KernelKMeans(cfg).fit(xi, key=0)
+pred = np.asarray(est.predict(xi))
 print(f"mini-batch kernel  ARI = {adjusted_rand_index(y, pred):.3f}  "
-      f"({len(hist)} iterations, early-stopped, "
-      f"window = {cfg.tau}+{cfg.batch_size} points/center)")
+      f"({len(est.history_)} iterations, early-stopped, "
+      f"window = {cfg.tau}+{cfg.batch_size} points/center, "
+      f"plan = {est.plan_.name})")
 
-# 3) same fit through the Gram tile cache (docs/cache.md): batches keep
-#    resampling the same rows, so most kernel evaluations are redundant —
-#    the cache serves them as gathers and counts what it saved.
+# 3) same fit through the Gram tile cache (docs/cache.md): flip ONE config
+#    axis — batches keep resampling the same rows, so most kernel
+#    evaluations are redundant; the cache serves them as gathers and
+#    counts what it saved.
 from repro.cache import stats
-from repro.core import fit_cached
 
 x2, y2 = circles(n=2048, seed=1)
-from repro.core import Gaussian
-gk = Gaussian(kappa=jnp.float32(0.5))
 x2j = jnp.asarray(x2, jnp.float32)
-cfg2 = MBConfig(k=2, batch_size=256, tau=200, epsilon=1e-4, max_iters=60)
-state2, hist2, ck = fit_cached(x2j, gk, cfg2, jax.random.PRNGKey(0),
-                               tile=128, capacity=16, sampler="nested")
-s = stats(ck.cache)
+cfg2 = SolverConfig(k=2, batch_size=256, tau=200, epsilon=1e-4,
+                    max_iters=60, kernel="rbf",
+                    kernel_params={"kappa": 0.5}, cache="lru",
+                    sampler="nested", cache_tile=128, cache_capacity=16,
+                    distribution="single", jit=False)
+est2 = KernelKMeans(cfg2).fit(x2j, key=0)
+s = stats(est2.cache_.cache)
 w = cfg2.tau + cfg2.batch_size
-uncached = len(hist2) * (2 * cfg2.batch_size * cfg2.k * w
-                         + cfg2.k * w * w)
-print(f"cached fit         {len(hist2)} iterations, hit rate "
+uncached = len(est2.history_) * (2 * cfg2.batch_size * cfg2.k * w
+                                 + cfg2.k * w * w)
+print(f"cached fit         {len(est2.history_)} iterations, hit rate "
       f"{s['hit_rate']:.0%} ({s['misses']} tile misses = {s['evals']} "
       f"kernel evals instead of ~{uncached})")
+
+# 4) serving round-trip: save the fitted centers, reload in a fresh
+#    process-like estimator, predict — no cache, Gram or mesh needed.
+path = est2.save("/tmp/quickstart_centers.npz")
+served = KernelKMeans.load(path)
+agree = float(jnp.mean((served.predict(x2j) == est2.predict(x2j))
+                       .astype(jnp.float32)))
+print(f"save/load/predict  agreement = {agree:.0%} ({path})")

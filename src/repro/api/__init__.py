@@ -1,0 +1,71 @@
+"""repro.api — the single front door for mini-batch kernel k-means.
+
+One estimator (:class:`KernelKMeans`, sklearn-style ``fit`` /
+``partial_fit`` / ``predict`` / ``transform`` / ``score`` plus ``save`` /
+``load``), configured by one :class:`SolverConfig` whose *orthogonal* axes
+(``cache`` x ``distribution`` x ``restarts`` x ``sampler`` x ``jit``)
+replace the eight legacy ``fit_*`` entry points.  A registry-driven
+resolver (:func:`resolve_plan` / :func:`register_solver`) maps any config
+point to a composed executor, so new execution strategies (e.g. the fused
+restart x data x model program on the roadmap) register as one more plan
+instead of a ninth ``fit_*``.
+
+See ``docs/api.md`` for the config matrix and the legacy migration table.
+
+This module is import-light and resolves its public names lazily (PEP 562)
+so ``repro.core`` can depend on :mod:`repro.api.keys` without a cycle.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "KernelKMeans",
+    "SolverConfig",
+    "FitOutcome",
+    "Plan",
+    "SolverSpec",
+    "register_solver",
+    "unregister_solver",
+    "list_solvers",
+    "resolve_plan",
+    "list_kernels",
+    "make_kernel",
+    "register_kernel_factory",
+    "keys",
+]
+
+# name -> submodule providing it (resolved on first attribute access)
+_EXPORTS = {
+    "KernelKMeans": "repro.api.estimator",
+    "SolverConfig": "repro.api.config",
+    "FitOutcome": "repro.api.executors",
+    "Plan": "repro.api.plan",
+    "SolverSpec": "repro.api.plan",
+    "register_solver": "repro.api.plan",
+    "unregister_solver": "repro.api.plan",
+    "list_solvers": "repro.api.plan",
+    "resolve_plan": "repro.api.plan",
+    "list_kernels": "repro.core.kernel_fns",
+    "make_kernel": "repro.core.kernel_fns",
+    "register_kernel_factory": "repro.core.kernel_fns",
+    "keys": "repro.api.keys",
+}
+
+
+def __getattr__(name: str):
+    try:
+        modname = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.api' has no attribute "
+                             f"{name!r}") from None
+    import importlib
+
+    if name == "keys":
+        value = importlib.import_module("repro.api.keys")
+    else:
+        value = getattr(importlib.import_module(modname), name)
+    globals()[name] = value      # cache for subsequent lookups
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

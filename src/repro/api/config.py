@@ -1,0 +1,174 @@
+"""``SolverConfig`` — one dataclass, orthogonal execution axes.
+
+The legacy surface hard-coded one point of the cache x sharding x restarts
+x jit space into each function NAME (``fit``, ``fit_cached``,
+``fit_distributed_cached_jit``, ...).  Here the same space is spanned by
+independent config axes:
+
+    cache         'none' | 'lru' | 'precomputed' | 'auto'
+    distribution  'single' | 'sharded' | 'auto'
+    restarts      R >= 1
+    sampler       'iid' | 'nested'
+    jit           host-driven loop (False) vs one compiled while_loop (True)
+
+plus the Algorithm-2 statics that previously lived in
+:class:`repro.core.minibatch.MBConfig` (``k``, ``batch_size``, ``tau``,
+``rate``, ...), and the kernel — either a built kernel pytree or a
+registry name (``kernel="rbf"`` + ``kernel_params``; see
+``repro.core.kernel_fns.list_kernels``).
+
+``resolve`` pins the ``auto`` axes for a concrete dataset/mesh;
+``repro.api.plan.resolve_plan`` then maps the resolved point to an
+executor through the solver registry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+from repro.core.kernel_fns import KernelFn, Precomputed, make_kernel
+from repro.core.minibatch import MBConfig
+
+_CACHE_VALUES = ("none", "lru", "precomputed", "auto")
+_DISTRIBUTION_VALUES = ("single", "sharded", "auto")
+_SAMPLER_VALUES = ("iid", "nested")
+
+# cache='auto' precomputes the full Gram while n^2 stays under this many
+# elements (f32: 64 MB) — beyond that it falls back to the LRU tile cache
+# for nested sampling, or no cache at all.
+PRECOMPUTED_AUTO_MAX_ELEMS = 16 * 2 ** 20
+
+
+@dataclass(frozen=True)
+class SolverConfig:
+    """Everything a :class:`repro.api.KernelKMeans` fit needs, in one
+    frozen dataclass.  All axes are orthogonal; unsupported combinations
+    are rejected by the plan resolver (with a pointer to
+    ``register_solver``), not by this class."""
+
+    # ---- Algorithm 2 statics (mirrors core.minibatch.MBConfig) ----------
+    k: int = 8
+    batch_size: int = 256
+    tau: int = 128
+    rate: str = "beta"
+    sqnorm_mode: str = "recompute"
+    eval_mode: str = "direct"
+    epsilon: float = 1e-4
+    max_iters: int = 200
+    use_pallas: bool = False
+    compute_dtype: str = "float32"
+
+    # ---- kernel ---------------------------------------------------------
+    kernel: Any = "rbf"                  # registry name or KernelFn pytree
+    kernel_params: Any = ()              # mapping / item-tuple for names
+
+    # ---- fit behaviour --------------------------------------------------
+    init: str = "kmeans++"               # 'kmeans++' | 'random'
+    early_stop: bool = True
+
+    # ---- execution axes -------------------------------------------------
+    cache: str = "auto"
+    distribution: str = "auto"
+    restarts: int = 1
+    sampler: str = "iid"
+    jit: bool = True
+
+    # ---- cache knobs ----------------------------------------------------
+    cache_tile: int = 256
+    cache_capacity: int = 16
+    cache_dtype: str = "float32"
+
+    # ---- nested-sampler knobs -------------------------------------------
+    reuse: float = 0.5
+    refresh: int = 8
+
+    # ---- distribution knobs ---------------------------------------------
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+
+    # ---- multi-restart knobs --------------------------------------------
+    restart_axis: Optional[str] = None
+    eval_batch_size: Optional[int] = None
+    share_eval_gram: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.cache not in _CACHE_VALUES:
+            raise ValueError(f"cache={self.cache!r} not in {_CACHE_VALUES}")
+        if self.distribution not in _DISTRIBUTION_VALUES:
+            raise ValueError(f"distribution={self.distribution!r} not in "
+                             f"{_DISTRIBUTION_VALUES}")
+        if self.sampler not in _SAMPLER_VALUES:
+            raise ValueError(f"sampler={self.sampler!r} not in "
+                             f"{_SAMPLER_VALUES}")
+        if self.restarts < 1:
+            raise ValueError("restarts must be >= 1")
+        if self.init not in ("kmeans++", "random"):
+            raise ValueError(f"init={self.init!r} (expected 'kmeans++' or "
+                             "'random')")
+        # normalize param containers to hashing-friendly tuples
+        kp = self.kernel_params
+        if not isinstance(kp, tuple):
+            kp = tuple(sorted(dict(kp).items()))
+        object.__setattr__(self, "kernel_params", kp)
+        object.__setattr__(self, "data_axes", tuple(self.data_axes))
+
+    # ------------------------------------------------------------------ --
+    def replace(self, **changes) -> "SolverConfig":
+        return dataclasses.replace(self, **changes)
+
+    def mb_config(self) -> MBConfig:
+        """The Algorithm-2 static config this point runs with."""
+        return MBConfig(k=self.k, batch_size=self.batch_size, tau=self.tau,
+                        rate=self.rate, sqnorm_mode=self.sqnorm_mode,
+                        eval_mode=self.eval_mode, epsilon=self.epsilon,
+                        max_iters=self.max_iters,
+                        use_pallas=self.use_pallas,
+                        compute_dtype=self.compute_dtype)
+
+    def make_kernel_fn(self) -> KernelFn:
+        """Resolve the kernel axis to an actual kernel pytree (registry
+        names go through ``repro.core.kernel_fns.make_kernel``)."""
+        return make_kernel(self.kernel, **dict(self.kernel_params))
+
+    def resolve(self, n: Optional[int] = None,
+                mesh=None) -> "SolverConfig":
+        """Pin the ``auto`` axes for a concrete dataset size / mesh.
+        Idempotent on already-resolved configs."""
+        changes = {}
+        if self.distribution == "auto":
+            sharded = (mesh is not None
+                       and self.model_axis in getattr(mesh, "axis_names", ()))
+            changes["distribution"] = "sharded" if sharded else "single"
+        if self.cache == "auto":
+            dist = changes.get("distribution", self.distribution)
+            kern = self.kernel
+            index_data = (not isinstance(kern, str)
+                          and (isinstance(kern, Precomputed)
+                               or hasattr(kern, "cache")))
+            if index_data:
+                # already an explicit-Gram / cached kernel: adding another
+                # cache layer on top would gain nothing
+                changes["cache"] = "none"
+            elif (dist == "single" and self.restarts == 1 and n is not None
+                    and n * n <= PRECOMPUTED_AUTO_MAX_ELEMS):
+                changes["cache"] = "precomputed"
+            elif dist == "single" and self.restarts == 1 \
+                    and self.sampler == "nested":
+                changes["cache"] = "lru"
+            else:
+                changes["cache"] = "none"
+        return self.replace(**changes) if changes else self
+
+    def axes_repr(self) -> str:
+        """Compact human string of the execution point (error messages,
+        plan descriptions)."""
+        return (f"cache={self.cache!r} distribution={self.distribution!r} "
+                f"restarts={self.restarts} sampler={self.sampler!r} "
+                f"jit={self.jit}")
+
+
+def field_names() -> Tuple[str, ...]:
+    """Ordered SolverConfig field names — snapshotted by the public-API
+    lock test (adding/removing/reordering fields is an API change)."""
+    return tuple(f.name for f in dataclasses.fields(SolverConfig))

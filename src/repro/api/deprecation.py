@@ -1,0 +1,34 @@
+"""Warn-once plumbing for the legacy ``fit_*`` shims.
+
+Every deprecated entry point warns EXACTLY ONCE per process (per entry
+point), with a message that names the :class:`repro.api.SolverConfig`
+point replacing it.  ``stacklevel`` is chosen so the warning is attributed
+to the *user's* call site, not to the shim — which also keeps the repo's
+"warnings from repro are errors" pytest filter from firing on the shims
+themselves.
+"""
+from __future__ import annotations
+
+import warnings
+
+_WARNED: set = set()
+
+
+def warn_legacy(name: str, replacement: str, *, stacklevel: int = 3) -> None:
+    """Emit the one-time DeprecationWarning for legacy entry point ``name``.
+
+    ``stacklevel=3`` attributes the warning to the caller of the shim that
+    invoked us (user code -> shim -> warn_legacy -> warnings.warn)."""
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"{name} is deprecated; use repro.api.{replacement} — see "
+        "docs/api.md for the migration table. (The shim delegates to the "
+        "equivalent solver plan; trajectories are unchanged.)",
+        DeprecationWarning, stacklevel=stacklevel)
+
+
+def reset_warnings() -> None:
+    """Forget which entry points have warned (test hook)."""
+    _WARNED.clear()

@@ -1,0 +1,207 @@
+"""``KernelKMeans`` — sklearn-style estimator over the solver-plan layer.
+
+    from repro.api import KernelKMeans, SolverConfig
+
+    est = KernelKMeans(SolverConfig(k=8, kernel="rbf",
+                                    kernel_params={"kappa": 2.0},
+                                    cache="auto", restarts=4))
+    est.fit(x, key=0)
+    labels = est.predict(xq)
+    est.save("centers.npz"); served = KernelKMeans.load("centers.npz")
+
+One ``fit`` for every execution point (cache x distribution x restarts x
+sampler x jit); the estimator resolves the config to a plan
+(:func:`repro.api.plan.resolve_plan`), caches the executor — and with it
+the compiled programs — across fits, and owns the serving surface
+(``predict`` / ``transform`` / ``score``) plus the ``save``/``load``
+state round-trip for serving processes.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import keys as api_keys
+from repro.api.config import SolverConfig, field_names
+from repro.api.executors import _assign, _distances
+from repro.core.kernel_fns import kernel_spec, make_kernel
+
+# SolverConfig fields that are JSON-serializable as-is (everything except
+# the kernel spec, which save() lowers to (name, params)).
+_JSON_FIELDS = tuple(f for f in field_names()
+                     if f not in ("kernel", "kernel_params"))
+
+
+class KernelKMeans:
+    """Mini-batch kernel k-means estimator (the paper's Algorithm 2 under
+    every execution strategy the repo implements).
+
+    Parameters: a :class:`SolverConfig` (or field overrides as kwargs) and
+    an optional ``mesh`` for the sharded / restart-sharded plans.
+
+    Fitted attributes: ``state_`` (truncated-center state), ``history_``
+    (host-driven plans), ``iters_``, ``cache_`` (tile cache(s), cached
+    plans), ``result_`` (per-restart ``EngineResult``, multi-restart
+    plans), ``plan_`` (the resolved :class:`repro.api.plan.Plan`).
+    """
+
+    def __init__(self, config: Optional[SolverConfig] = None, *,
+                 mesh=None, **overrides):
+        if config is None:
+            config = SolverConfig(**overrides)
+        elif overrides:
+            config = config.replace(**overrides)
+        self.config = config
+        self.mesh = mesh
+        self.plan_ = None
+        self._plan_sig = None
+        self._outcome = None
+        self._x = None
+        self._serving = None      # (kernel, sup, coef, sqnorm) after load()
+        self.state_ = None
+        self.history_ = None
+        self.iters_ = None
+        self.cache_ = None
+        self.result_ = None
+
+    # ------------------------------------------------------------- plans
+    def plan_for(self, n: int):
+        """Resolve (and cache) the execution plan for an n-row dataset.
+        The executor — and the compiled programs it holds — is reused
+        across fits as long as the resolved execution point is stable."""
+        from repro.api.plan import resolve_plan
+
+        resolved = self.config.resolve(n=n, mesh=self.mesh)
+        sig = (resolved.cache, resolved.distribution, resolved.restarts,
+               resolved.sampler, resolved.jit)
+        if self.plan_ is None or sig != self._plan_sig:
+            self.plan_ = resolve_plan(self.config, n=n, mesh=self.mesh)
+            self._plan_sig = sig
+        return self.plan_
+
+    # --------------------------------------------------------------- fit
+    def fit(self, X, key: Any = 0, *, init_idx=None, sample_weight=None):
+        """Fit on ``(n, d)`` data (or the ``(n, 1)`` index view of a
+        precomputed kernel).  ``key``: int seed or JAX PRNG key — the
+        estimator derives init/fit keys through :mod:`repro.api.keys`, so
+        the same seed draws the same batch sequence on every
+        single-restart plan."""
+        X = jnp.asarray(X)
+        key = api_keys.as_key(key)
+        plan = self.plan_for(X.shape[0])
+        out = plan.executor.fit(X, key, init_idx=init_idx,
+                                sample_weight=sample_weight)
+        self._set_fitted(X, out)
+        return self
+
+    def partial_fit(self, X, key: Any = 0, *, iters: Optional[int] = None):
+        """Continue (or start) fitting for ``iters`` more iterations
+        (default ``config.max_iters``), resuming the batch-key stream
+        exactly where the previous call stopped — ``fit(max_iters=a+b)``
+        and ``fit(max_iters=a); partial_fit(iters=b)`` draw identical
+        batches.  Single-restart, single-device plans only."""
+        X = jnp.asarray(X)
+        iters = iters if iters is not None else self.config.max_iters
+        if self._outcome is None:
+            plan = self.plan_for(X.shape[0])
+            if not plan.executor.supports_partial_fit:
+                raise NotImplementedError(
+                    f"plan {plan.name!r} does not support partial_fit "
+                    "(use restarts=1, distribution='single', "
+                    "cache='none')")
+            out = plan.executor.fit(X, api_keys.as_key(key),
+                                    max_iters=iters)
+            self._set_fitted(X, out)
+            return self
+        plan = self.plan_
+        if not plan.executor.supports_partial_fit:
+            raise NotImplementedError(
+                f"plan {plan.name!r} does not support partial_fit")
+        out = plan.executor.resume(X, self._outcome, iters)
+        if self.history_ is not None and out.history is not None:
+            out.history = self.history_ + out.history
+        self._set_fitted(X, out)
+        return self
+
+    def _set_fitted(self, X, out):
+        self._x = X
+        self._outcome = out
+        self._serving = None
+        self.state_ = out.state
+        self.history_ = out.history
+        self.iters_ = out.iters
+        self.cache_ = out.cache if out.cache is not None else out.caches
+        self.result_ = out.engine
+
+    # ----------------------------------------------------------- serving
+    def _serving_tuple(self):
+        if self._serving is not None:
+            return self._serving
+        if self._outcome is None:
+            raise RuntimeError("fit() (or load()) before serving")
+        return self.plan_.executor.serving_tuple(self._outcome, self._x)
+
+    def predict(self, X, chunk: int = 4096):
+        """Nearest-center labels (nq,) for coordinate queries."""
+        X = jnp.asarray(X)
+        if self._serving is None and self._outcome is not None:
+            return self.plan_.executor.predict(self._outcome, self._x, X,
+                                               chunk=chunk)
+        kern, sup, coef, sqnorm = self._serving_tuple()
+        return _assign(kern, coef, sqnorm, sup, X, chunk)
+
+    def transform(self, X, chunk: int = 4096):
+        """Feature-space distances d(x, C_j), (nq, k) — the
+        cluster-distance embedding."""
+        kern, sup, coef, sqnorm = self._serving_tuple()
+        return _distances(kern, coef, sqnorm, sup, jnp.asarray(X), chunk)
+
+    def score(self, X) -> float:
+        """Negative clustering objective (mean min squared feature-space
+        distance) — higher is better, sklearn-style."""
+        d = self.transform(X)
+        return -float(jnp.mean(jnp.min(d, axis=1)))
+
+    def fit_predict(self, X, key: Any = 0, **kw):
+        return self.fit(X, key, **kw).predict(X)
+
+    # -------------------------------------------------------- save / load
+    def save(self, path: str) -> str:
+        """Serialize the serving state (support coordinates, coefficients,
+        center norms) plus the config to an ``.npz``.  Works for every
+        plan whose kernel has a registry spec (``kernel_spec``) — cached /
+        precomputed / sharded states are lowered to base-kernel support
+        coordinates first, so a served prediction needs no cache, Gram or
+        mesh."""
+        kern, sup, coef, sqnorm = self._serving_tuple()
+        name, params = kernel_spec(kern)
+        meta = {"kernel": name, "kernel_params": params,
+                "config": {f: getattr(self.config, f)
+                           for f in _JSON_FIELDS}}
+        with open(path, "wb") as f:
+            np.savez(f, sup=np.asarray(sup), coef=np.asarray(coef),
+                     sqnorm=np.asarray(sqnorm),
+                     meta=np.frombuffer(
+                         json.dumps(meta).encode(), dtype=np.uint8))
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "KernelKMeans":
+        """Rebuild a serving-only estimator (``predict`` / ``transform`` /
+        ``score``; call ``fit`` to train anew)."""
+        with np.load(path) as data:
+            meta = json.loads(bytes(data["meta"]).decode())
+            sup = jnp.asarray(data["sup"])
+            coef = jnp.asarray(data["coef"])
+            sqnorm = jnp.asarray(data["sqnorm"])
+        cfg_dict = dict(meta["config"])
+        cfg_dict["kernel"] = meta["kernel"]
+        cfg_dict["kernel_params"] = meta["kernel_params"]
+        est = cls(SolverConfig(**cfg_dict))
+        est._serving = (make_kernel(meta["kernel"],
+                                    **meta["kernel_params"]),
+                        sup, coef, sqnorm)
+        return est

@@ -1,0 +1,680 @@
+"""Solver executors — the composed fit/predict drivers behind every plan.
+
+Each executor owns exactly the orchestration that used to be copy-pasted
+across the ``fit_*`` family: PRNG key-splitting (:mod:`repro.api.keys`),
+init drawing (:func:`repro.core.init.draw_init`), divisibility
+pad-and-mask (:func:`repro.core.distributed.pad_for_mesh`), and cache
+lifecycle (build/warm/thread of the Gram tile cache).  The numerical inner
+loops stay in :mod:`repro.core` (``make_step``, ``run_early_stopped*``,
+``host_fit_loop``, the shard_map step builders) — executors only compose
+them, so a plan-vs-legacy trajectory is the *same* compiled computation.
+
+Executors are stateful on purpose: they cache the compiled programs
+(jitted step / while_loop run) across ``fit`` calls, which is what makes
+``KernelKMeans`` dispatch resolve at trace time with zero per-step Python
+overhead (see ``benchmarks/run.py api_overhead``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import keys as api_keys
+from repro.api.config import SolverConfig
+from repro.core import init as init_lib
+from repro.core.minibatch import (
+    assign_chunked, center_distances_chunked, host_fit_loop, make_step,
+    run_early_stopped, run_early_stopped_keyed, sampled_step_with_key,
+)
+from repro.core.state import init_state, window_size
+
+_assign = jax.jit(assign_chunked, static_argnames=("chunk",))
+_distances = jax.jit(center_distances_chunked, static_argnames=("chunk",))
+
+
+@dataclasses.dataclass
+class FitOutcome:
+    """What a plan's ``fit`` produced.  ``state`` is a ``CenterState``
+    (single-device plans) or ``DistState`` (sharded plans); the optional
+    fields carry plan-specific artifacts (tile cache, engine diagnostics,
+    the carried PRNG key for ``partial_fit`` resumption)."""
+
+    state: Any
+    iters: Any                              # python int or on-device scalar
+    history: Optional[List[dict]] = None    # host-driven plans only
+    key: Optional[jax.Array] = None         # carried fit-stream key
+    steps: int = 0                          # completed host-loop steps
+    cache: Any = None                       # CachedKernel (single lru plan)
+    caches: Any = None                      # stacked per-shard tile caches
+    engine: Any = None                      # EngineResult (multi-restart)
+    x_view: Any = None                      # index-data view (lru/precomp)
+
+
+def _loop_mb(mb, early_stop: bool, max_iters=None):
+    """The MBConfig a jitted early-stopped loop should run with:
+    ``early_stop=False`` lowers to an epsilon no improvement can undercut
+    (the ``run_early_stopped`` condition is baked into the compiled loop,
+    unlike the host loop's python check)."""
+    if max_iters is not None:
+        mb = mb._replace(max_iters=max_iters)
+    if not early_stop:
+        mb = mb._replace(epsilon=float("-inf"))
+    return mb
+
+
+def _derive_keys(key, init_given: bool, always_split: bool):
+    """``(init_key, fit_key)`` under the unified derivation.  The estimator
+    always splits (``always_split=True``) so its batch stream never depends
+    on who drew the init; the legacy shims only split when they draw the
+    init themselves (historical behaviour, bit-exactness of old tests)."""
+    if not init_given:
+        return api_keys.split_init(key)
+    if always_split:
+        return None, api_keys.split_init(key)[1]
+    return None, key
+
+
+class Executor:
+    """Base class: holds (config, mesh), resolves the kernel once, and
+    provides the serving-side defaults (predict / distances from the
+    support-point view of the fitted state)."""
+
+    name = "?"
+    supports_partial_fit = False
+
+    def __init__(self, config: SolverConfig, mesh=None):
+        self.config = config
+        self.mesh = mesh
+        self.kernel = config.make_kernel_fn()
+        self.mb = config.mb_config()
+
+    # -- fitting ----------------------------------------------------------
+    def fit(self, x, key, init_idx=None, center_pts=None,
+            sample_weight=None, always_split: bool = True,
+            **kw) -> FitOutcome:
+        raise NotImplementedError
+
+    def resume(self, x, outcome: FitOutcome, iters: int) -> FitOutcome:
+        raise NotImplementedError(
+            f"plan {self.name!r} does not support partial_fit resumption")
+
+    # -- serving ----------------------------------------------------------
+    def serving_tuple(self, outcome: FitOutcome, x):
+        """``(kernel, sup, coef, sqnorm)`` with ``sup`` the (k*W, d)
+        support COORDINATES and ``kernel`` directly evaluable on
+        coordinates — the uniform serving view every plan lowers to
+        (index-data plans resolve their row ids here)."""
+        state = outcome.state
+        sup = x[state.idx.reshape(-1)]
+        return self.kernel, sup, state.coef, state.sqnorm
+
+    def predict(self, outcome: FitOutcome, x, xq, chunk: int = 4096):
+        kern, sup, coef, sqnorm = self.serving_tuple(outcome, x)
+        return _assign(kern, coef, sqnorm, sup, xq, chunk)
+
+    def distances(self, outcome: FitOutcome, x, xq, chunk: int = 4096):
+        kern, sup, coef, sqnorm = self.serving_tuple(outcome, x)
+        return _distances(kern, coef, sqnorm, sup, xq, chunk)
+
+
+# ---------------------------------------------------------------- single
+class SingleExecutor(Executor):
+    """cache='none', distribution='single', restarts=1 — the paper's plain
+    Algorithm-2 fit.  ``jit=True`` runs the whole early-stopped loop as one
+    compiled ``lax.while_loop`` (legacy ``fit_jit``); ``jit=False`` (or a
+    nested sampler / sample weights) drives it from the host (legacy
+    ``fit``)."""
+
+    name = "single"
+    supports_partial_fit = True
+
+    def __init__(self, config, mesh=None):
+        super().__init__(config, mesh)
+        self._host_step = None
+        self._runs = {}       # ("init"|"resume", max_iters) -> compiled run
+
+    def _ensure_host_step(self):
+        if self._host_step is None:
+            self._host_step = jax.jit(make_step(self.kernel, self.mb),
+                                      donate_argnums=(0,))
+        return self._host_step
+
+    def _jit_run(self, kind: str, max_iters: int):
+        run = self._runs.get((kind, max_iters))
+        if run is None:
+            kernel = self.kernel
+            mb = _loop_mb(self.mb, self.config.early_stop,
+                          max_iters=max_iters)
+            w = window_size(mb.batch_size, mb.tau)
+            step = make_step(kernel, mb)
+
+            if kind == "init":
+                @jax.jit
+                def run(x, init_idx, key):
+                    state0 = init_state(x, init_idx, kernel, w)
+                    return run_early_stopped_keyed(
+                        mb, sampled_step_with_key(step, x, mb), state0,
+                        key)
+            else:
+                @jax.jit
+                def run(x, state, key):
+                    return run_early_stopped_keyed(
+                        mb, sampled_step_with_key(step, x, mb), state, key)
+
+            self._runs[(kind, max_iters)] = run
+        return run
+
+    def _use_jit(self, sample_weight):
+        return (self.config.jit and sample_weight is None
+                and self.config.sampler == "iid")
+
+    def fit(self, x, key, init_idx=None, center_pts=None,
+            sample_weight=None, always_split: bool = True,
+            max_iters: Optional[int] = None, **kw) -> FitOutcome:
+        cfg = self.config
+        mb = self.mb if max_iters is None \
+            else self.mb._replace(max_iters=max_iters)
+        init_key, fit_key = _derive_keys(key, init_idx is not None,
+                                         always_split)
+        if init_idx is None:
+            init_idx = init_lib.draw_init(init_key, x, mb.k, self.kernel,
+                                          cfg.init)
+
+        if self._use_jit(sample_weight):
+            run = self._jit_run("init", mb.max_iters)
+            state, iters, out_key = run(x, init_idx, fit_key)
+            return FitOutcome(state=state, iters=iters, key=out_key,
+                              steps=None)
+
+        probs = None
+        if sample_weight is not None:
+            probs = jnp.asarray(sample_weight, jnp.float32)
+            probs = probs / jnp.sum(probs)
+        step = self._ensure_host_step()
+        w = window_size(mb.batch_size, mb.tau)
+        state0 = init_state(x, init_idx, self.kernel, w)
+        state, history, out_key = host_fit_loop(
+            lambda st, bidx: step(st, x, bidx), x.shape[0], mb, state0,
+            fit_key, probs=probs, early_stop=cfg.early_stop,
+            sampler=cfg.sampler, reuse=cfg.reuse, refresh=cfg.refresh)
+        return FitOutcome(state=state, iters=len(history), history=history,
+                          key=out_key, steps=len(history))
+
+    def resume(self, x, outcome: FitOutcome, iters: int) -> FitOutcome:
+        cfg = self.config
+        if outcome.key is None:
+            raise ValueError("outcome carries no fit key; cannot resume")
+        prev = outcome.steps
+        if prev is None:
+            prev = int(outcome.iters)
+        if self._use_jit(None):
+            run = self._jit_run("resume", iters)
+            state, it2, out_key = run(x, outcome.state, outcome.key)
+            return FitOutcome(state=state, iters=it2, key=out_key,
+                              steps=prev + int(it2))
+        step = self._ensure_host_step()
+        mb = self.mb._replace(max_iters=iters)
+        state, history, out_key = host_fit_loop(
+            lambda st, bidx: step(st, x, bidx), x.shape[0], mb,
+            outcome.state, outcome.key, early_stop=cfg.early_stop,
+            sampler=cfg.sampler, reuse=cfg.reuse, refresh=cfg.refresh,
+            step0=prev)
+        return FitOutcome(state=state, iters=len(history), history=history,
+                          key=out_key, steps=prev + len(history))
+
+
+# ---------------------------------------------------------- precomputed
+class PrecomputedExecutor(Executor):
+    """cache='precomputed', distribution='single', restarts=1 — pay the
+    n^2 Gram ONCE (``repro.cache.PrecomputedGram``), then every iteration
+    is pure gathers.  The right plan when n^2 fits on device (cache='auto'
+    picks it below ``config.PRECOMPUTED_AUTO_MAX_ELEMS``).
+
+    The compiled programs take the Gram kernel as a traced ARGUMENT (pk is
+    a pytree), so refitting on new data of the same shape reuses the
+    compiled loop instead of re-tracing — and can never bake stale Gram
+    values in as constants."""
+
+    name = "single_precomputed"
+
+    def __init__(self, config, mesh=None):
+        super().__init__(config, mesh)
+        self._jit_run_cache = None
+        self._host_step = None
+
+    def _jit_run(self):
+        if self._jit_run_cache is None:
+            mb = _loop_mb(self.mb, self.config.early_stop)
+            w = window_size(mb.batch_size, mb.tau)
+
+            @jax.jit
+            def run(pk, xi, init_idx, key):
+                step = make_step(pk, mb)
+                state0 = init_state(xi, init_idx, pk, w)
+                return run_early_stopped_keyed(
+                    mb, sampled_step_with_key(step, xi, mb), state0, key)
+
+            self._jit_run_cache = run
+        return self._jit_run_cache
+
+    def _ensure_host_step(self):
+        if self._host_step is None:
+            mb = self.mb
+
+            def hstep(pk, state, xi, bidx):
+                return make_step(pk, mb)(state, xi, bidx)
+
+            self._host_step = jax.jit(hstep, donate_argnums=(1,))
+        return self._host_step
+
+    def fit(self, x, key, init_idx=None, center_pts=None,
+            sample_weight=None, always_split: bool = True,
+            **kw) -> FitOutcome:
+        from repro import cache as cache_lib
+
+        cfg, mb = self.config, self.mb
+        if sample_weight is not None:
+            raise NotImplementedError("precomputed plan does not take "
+                                      "sample weights (use cache='none')")
+        pk, xi = cache_lib.as_kernel(cache_lib.precompute_gram(self.kernel,
+                                                               x))
+        init_key, fit_key = _derive_keys(key, init_idx is not None,
+                                         always_split)
+        if init_idx is None:
+            init_idx = init_lib.draw_init(init_key, xi, mb.k, pk, cfg.init)
+        if cfg.jit and cfg.sampler == "iid":
+            state, iters, out_key = self._jit_run()(pk, xi, init_idx,
+                                                    fit_key)
+            return FitOutcome(state=state, iters=iters, key=out_key,
+                              steps=None, x_view=xi)
+        w = window_size(mb.batch_size, mb.tau)
+        state0 = init_state(xi, init_idx, pk, w)
+        step = self._ensure_host_step()
+        state, history, out_key = host_fit_loop(
+            lambda st, bidx: step(pk, st, xi, bidx), x.shape[0], mb,
+            state0, fit_key, early_stop=cfg.early_stop,
+            sampler=cfg.sampler, reuse=cfg.reuse, refresh=cfg.refresh)
+        return FitOutcome(state=state, iters=len(history), history=history,
+                          key=out_key, steps=len(history), x_view=xi)
+
+
+# ------------------------------------------------------------------ lru
+class CachedExecutor(Executor):
+    """cache='lru', distribution='single', restarts=1 — the Gram tile
+    cache fit (legacy ``fit_cached``): warm the batch+window row blocks,
+    then the unchanged Algorithm-2 step serves every cross-kernel block
+    from resident tiles.  Host-driven (the warm/step pair is one jitted
+    program per iteration); the nested sampler keeps the working set
+    resident."""
+
+    name = "single_lru"
+
+    def __init__(self, config, mesh=None):
+        super().__init__(config, mesh)
+        if self.mb.sqnorm_mode != "recompute" or self.mb.eval_mode != \
+                "direct":
+            # the incremental/delta variants evaluate cross-kernels inside
+            # per-center vmaps, where cached lookups degrade to select
+            # (both branches run) — correct but strictly slower
+            raise ValueError("fit_cached supports the paper-faithful "
+                             "sqnorm_mode='recompute' / eval_mode='direct' "
+                             "(per-center vmapped kernel evals defeat the "
+                             "cache's cond-skip)")
+        self._step = None
+
+    def _ensure_step(self):
+        if self._step is None:
+            from repro import cache as cache_lib
+            from repro.cache.tile_cache import warm
+
+            kernel, mb = self.kernel, self.mb
+
+            def _cached_step(state, cache, xr, xi, batch_idx):
+                # only (state, cache) are donated — the dataset and base
+                # kernel buffers stay owned by the caller
+                need = jnp.concatenate([batch_idx.astype(jnp.int32),
+                                        state.idx.reshape(-1)])
+                cache = warm(cache, kernel, xr, need)
+                ck_t = cache_lib.CachedKernel(base=kernel, x=xr,
+                                              cache=cache)
+                st, info = make_step(ck_t, mb)(state, xi, batch_idx)
+                return st, cache, info
+
+            self._step = jax.jit(_cached_step, donate_argnums=(0, 1))
+        return self._step
+
+    def fit(self, x, key, init_idx=None, center_pts=None,
+            sample_weight=None, always_split: bool = True,
+            **kw) -> FitOutcome:
+        from repro import cache as cache_lib
+
+        cfg, mb = self.config, self.mb
+        if sample_weight is not None:
+            raise NotImplementedError("lru plan does not take sample "
+                                      "weights (use cache='none')")
+        init_key, fit_key = _derive_keys(key, init_idx is not None,
+                                         always_split)
+        if init_idx is None:
+            init_idx = init_lib.draw_init(init_key, x, mb.k, self.kernel,
+                                          cfg.init)
+        # pad the CACHE's row space to a tile multiple (the tile store
+        # wants tile | n); the sampler draws from the real n rows only, so
+        # pad rows are never referenced — only their (wasted) tile slots
+        # exist
+        n = x.shape[0]
+        pad = (-n) % cfg.cache_tile
+        x_cache = x if pad == 0 else jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+        ck, xi_full = cache_lib.make_cached(
+            self.kernel, x_cache, tile=cfg.cache_tile,
+            capacity=cfg.cache_capacity,
+            dtype=jnp.dtype(cfg.cache_dtype))
+        xi = xi_full[:n]
+        w = window_size(mb.batch_size, mb.tau)
+        state = init_state(xi, init_idx, ck, w)
+        step = self._ensure_step()
+
+        cache = ck.cache
+
+        def step2(st, bidx):
+            nonlocal cache
+            st, cache, info = step(st, cache, x_cache, xi, bidx)
+            return st, info
+
+        state, history, out_key = host_fit_loop(
+            step2, n, mb, state, fit_key,
+            early_stop=cfg.early_stop, sampler=cfg.sampler,
+            reuse=cfg.reuse, refresh=cfg.refresh)
+        return FitOutcome(state=state, iters=len(history), history=history,
+                          key=out_key, steps=len(history),
+                          cache=ck._replace(cache=cache), x_view=xi)
+
+
+# -------------------------------------------------------------- sharded
+class ShardedExecutor(Executor):
+    """distribution='sharded', cache='none', restarts=1 — the shard_map
+    data x model path.  ``jit=True`` is the zero-host-sync while_loop with
+    shard-local sampling (legacy ``fit_distributed_jit``); ``jit=False``
+    drives the sharded step from a host batch stream (legacy
+    ``fit_distributed``, batches drawn through the unified key stream via
+    ``ClusterBatchPipeline(mode='keyed')``).
+
+    Divisibility: non-divisible datasets are padded and the shard-local
+    samplers masked (``pad_for_mesh`` + ``n_valid``); a batch size that
+    does not divide the data shards is rounded UP to the next multiple
+    (``effective_batch_size``) — both were hard errors on the legacy
+    surface (``strict=True`` restores them for the shims)."""
+
+    name = "sharded"
+
+    def __init__(self, config, mesh=None):
+        if mesh is None:
+            from repro.launch.mesh import make_cluster_mesh
+            mesh = make_cluster_mesh()
+        super().__init__(config, mesh)
+        from repro.core.distributed import _data_shard_count
+        self._shards = _data_shard_count(mesh, config.data_axes)
+        b = self.mb.batch_size
+        self.effective_batch_size = -(-b // self._shards) * self._shards
+        self._mb_eff = self.mb._replace(batch_size=self.effective_batch_size)
+        self._runs = {}
+
+    def _mb_for(self, strict: bool):
+        return self.mb if strict else self._mb_eff
+
+    def _get_run(self, n_valid, strict: bool):
+        key = (n_valid, strict)
+        run = self._runs.get(key)
+        if run is None:
+            from repro.core.distributed import make_dist_sampling_step
+
+            mb = self._mb_for(strict)
+            loop_mb = _loop_mb(mb, self.config.early_stop)
+            step = make_dist_sampling_step(
+                self.kernel, mb, self.mesh, self.config.data_axes,
+                self.config.model_axis, n_valid=n_valid)
+
+            @jax.jit
+            def run(state, x, key):
+                def step_with_key(st, kb):
+                    st, info = step(st, x, kb)
+                    return st, info.improvement
+
+                return run_early_stopped(loop_mb, step_with_key, state,
+                                         key)
+
+            self._runs[key] = run
+        return run
+
+    def _resolve_centers(self, x, key, init_idx, center_pts, always_split):
+        if center_pts is not None:
+            _, fit_key = _derive_keys(key, True, always_split)
+            return center_pts, fit_key
+        init_key, fit_key = _derive_keys(key, init_idx is not None,
+                                         always_split)
+        if init_idx is None:
+            init_idx = init_lib.draw_init(init_key, x, self.mb.k,
+                                          self.kernel, self.config.init)
+        return x[init_idx], fit_key
+
+    def fit(self, x, key, init_idx=None, center_pts=None,
+            sample_weight=None, always_split: bool = True,
+            strict: bool = False, pad_fill: float = 0.0,
+            **kw) -> FitOutcome:
+        from repro.core.distributed import (
+            init_dist_state, pad_for_mesh, shard_dataset, state_shardings)
+
+        cfg = self.config
+        mb = self._mb_for(strict)
+        if sample_weight is not None:
+            raise NotImplementedError("sharded plans do not take sample "
+                                      "weights (use distribution='single')")
+        center_pts, fit_key = self._resolve_centers(
+            x, key, init_idx, center_pts, always_split)
+
+        if not cfg.jit:
+            return self._fit_host(x, center_pts, fit_key, mb)
+
+        if strict:
+            x_p, n_valid = x, None
+        else:
+            x_p, nv = pad_for_mesh(x, self.mesh, cfg.data_axes,
+                                   fill=pad_fill)
+            n_valid = None if x_p is x else nv
+        w = window_size(mb.batch_size, mb.tau)
+        state0 = jax.device_put(
+            init_dist_state(center_pts, self.kernel, w),
+            state_shardings(self.mesh, cfg.model_axis))
+        xs = shard_dataset(x_p, self.mesh, cfg.data_axes)
+        state, iters = self._get_run(n_valid, strict)(state0, xs, fit_key)
+        return FitOutcome(state=state, iters=iters)
+
+    def _fit_host(self, x, center_pts, fit_key, mb):
+        import numpy as np
+
+        from repro.data.pipeline import ClusterBatchPipeline
+
+        pipe = ClusterBatchPipeline(np.asarray(x), batch=mb.batch_size,
+                                    mode="keyed", key=fit_key)
+        state, history = self.fit_stream(iter(pipe), center_pts, mb=mb)
+        return FitOutcome(state=state, iters=len(history), history=history)
+
+    def fit_stream(self, xb_stream, center_pts, mb=None):
+        """Drive the sharded step from an arbitrary host iterator of
+        (b, d) batches — the legacy ``fit_distributed`` surface (and
+        ``cluster_hidden_states``)."""
+        from repro.core.distributed import _fit_distributed_impl
+
+        cfg = self.config
+        return _fit_distributed_impl(
+            xb_stream, center_pts, self.kernel, mb or self.mb, self.mesh,
+            cfg.data_axes, cfg.model_axis, early_stop=cfg.early_stop)
+
+    def serving_tuple(self, outcome: FitOutcome, x):
+        state = outcome.state                     # DistState: coord windows
+        k, w, d = state.pts.shape
+        return (self.kernel, state.pts.reshape(k * w, d), state.coef,
+                state.sqnorm)
+
+    def predict(self, outcome: FitOutcome, x, xq, chunk: int = 4096):
+        from repro.core.distributed import (
+            dist_to_center_state, predict_distributed)
+
+        kern, sup, coef, sqnorm = self.serving_tuple(outcome, x)
+        return predict_distributed(dist_to_center_state(outcome.state),
+                                   sup, xq, kern, self.mesh, chunk=chunk)
+
+
+# ------------------------------------------------------ sharded + cache
+class ShardedCachedExecutor(ShardedExecutor):
+    """distribution='sharded', cache='lru', jit=True — per-data-shard Gram
+    tile caches carried through the while_loop (legacy
+    ``fit_distributed_cached_jit``)."""
+
+    name = "sharded_lru"
+
+    def _get_cached_run(self, x_real, n_valid, strict: bool):
+        # the step builder CLOSES OVER x_real (real coordinates, evaluated
+        # on cache misses), baking its values into the compiled program —
+        # so the cache entry is valid only for that exact array object,
+        # never merely for its shape
+        key = ("cached", n_valid, strict)
+        entry = self._runs.get(key)
+        if entry is not None and entry[0] is x_real:
+            return entry[1]
+        from repro.core.distributed import make_cached_dist_sampling_step
+
+        mb = self._mb_for(strict)
+        loop_mb = _loop_mb(mb, self.config.early_stop)
+        step = make_cached_dist_sampling_step(
+            self.kernel, x_real, mb, self.mesh, self.config.data_axes,
+            self.config.model_axis, n_valid=n_valid)
+
+        @jax.jit
+        def run(state, caches, x_idx, key):
+            def step_with_key(carry, kb):
+                st, cc = carry
+                st, cc, info = step(st, cc, x_idx, kb)
+                return (st, cc), info.improvement
+
+            (state, caches), iters = run_early_stopped(
+                loop_mb, step_with_key, (state, caches), key)
+            return state, caches, iters
+
+        self._runs[key] = (x_real, run)
+        return run
+
+    def fit(self, x, key, init_idx=None, center_pts=None,
+            sample_weight=None, always_split: bool = True,
+            strict: bool = False, pad_fill: float = 0.0,
+            **kw) -> FitOutcome:
+        from repro.cache.cached_kernel import make_cached
+        from repro.core.distributed import (
+            init_dist_state, init_shard_caches, shard_dataset,
+            state_shardings)
+
+        cfg = self.config
+        mb = self._mb_for(strict)
+        if not cfg.jit:
+            raise NotImplementedError(
+                "the sharded lru plan is jit-only (the tile caches ride "
+                "the while_loop carry); set jit=True or cache='none'")
+        if sample_weight is not None:
+            raise NotImplementedError("sharded plans do not take sample "
+                                      "weights")
+        init_key, fit_key = _derive_keys(key, init_idx is not None,
+                                         always_split)
+        if init_idx is None:
+            init_idx = init_lib.draw_init(init_key, x, mb.k, self.kernel,
+                                          cfg.init)
+        cache_dtype = jnp.dtype(cfg.cache_dtype)
+        # one padded row space serves BOTH constraints: divisible over the
+        # data shards AND by the cache tile (pad_for_mesh's `multiple`).
+        # Pad rows are masked out of the shard-local samplers (n_valid),
+        # so only their tile slots exist — their coordinates never reach a
+        # batch or a window.
+        from repro.core.distributed import pad_for_mesh
+
+        n = x.shape[0]
+        if strict:
+            x_cache, n_valid = x, None
+        else:
+            x_cache, nv = pad_for_mesh(x, self.mesh, cfg.data_axes,
+                                       fill=pad_fill,
+                                       multiple=cfg.cache_tile)
+            n_valid = None if x_cache is x else nv
+        ck0, xi_full = make_cached(self.kernel, x_cache,
+                                   tile=cfg.cache_tile,
+                                   capacity=cfg.cache_capacity,
+                                   dtype=cache_dtype)
+        xi = xi_full[:n]
+        w = window_size(mb.batch_size, mb.tau)
+        center_data = xi[init_idx]                  # (k, 1) index-data
+        state0 = jax.device_put(
+            init_dist_state(center_data, ck0, w),
+            state_shardings(self.mesh, cfg.model_axis))
+        xs = shard_dataset(xi_full, self.mesh, cfg.data_axes)
+        caches0 = init_shard_caches(self.mesh, x_cache.shape[0],
+                                    cfg.cache_tile, cfg.cache_capacity,
+                                    cfg.data_axes, cache_dtype)
+        run = self._get_cached_run(x_cache, n_valid, strict)
+        state, caches, iters = run(state0, caches0, xs, fit_key)
+        return FitOutcome(state=state, iters=iters, caches=caches,
+                          x_view=xi)
+
+    def serving_tuple(self, outcome: FitOutcome, x):
+        state = outcome.state                  # DistState: index windows
+        k, w, _ = state.pts.shape
+        ids = state.pts[..., 0].reshape(-1).astype(jnp.int32)
+        return self.kernel, x[ids], state.coef, state.sqnorm
+
+
+# -------------------------------------------------------- multi-restart
+class RestartExecutor(Executor):
+    """restarts=R>1 — the best-of-R engine as one compiled program
+    (legacy ``fit_restarts`` / ``MultiRestartEngine``), restart axis
+    optionally device-sharded via a restart mesh.  The compiled R-restart
+    program and the vmapped init draw are cached across fits."""
+
+    name = "multi_restart"
+
+    def __init__(self, config, mesh=None):
+        super().__init__(config, mesh)
+        self._run = None
+        self._init_run = None
+
+    def fit(self, x, key, init_idx=None, center_pts=None,
+            sample_weight=None, always_split: bool = True,
+            _run=None, _init_run=None, **kw) -> FitOutcome:
+        from repro.core.engine import (
+            _fit_restarts, make_init_run, make_restart_run)
+
+        cfg = self.config
+        if sample_weight is not None:
+            raise NotImplementedError("multi-restart plans do not take "
+                                      "sample weights")
+        if _run is None:
+            if self._run is None:
+                self._run = make_restart_run(self.kernel, self.mb,
+                                             cfg.share_eval_gram)
+                self._init_run = make_init_run(self.kernel, self.mb,
+                                               cfg.init)
+            _run, _init_run = self._run, self._init_run
+        res = _fit_restarts(
+            x, self.kernel, self.mb, key, cfg.restarts, init=cfg.init,
+            init_idx=init_idx, mesh=self.mesh,
+            restart_axis=cfg.restart_axis,
+            eval_batch_size=cfg.eval_batch_size,
+            share_eval_gram=cfg.share_eval_gram, _run=_run,
+            _init_run=_init_run)
+        return FitOutcome(state=res.state, iters=res.iters, engine=res)
+
+    def predict(self, outcome: FitOutcome, x, xq, chunk: int = 4096):
+        if self.mesh is None:
+            return super().predict(outcome, x, xq, chunk=chunk)
+        from repro.core.distributed import predict_distributed
+        return predict_distributed(outcome.state, x, xq, self.kernel,
+                                   self.mesh, chunk=chunk)

@@ -1,0 +1,102 @@
+"""Single source of truth for PRNG key derivation across every fit variant.
+
+Before this module existed, ``fit``, ``fit_cached`` and
+``fit_distributed_jit`` each split keys in a slightly different order, so
+the same seed produced *different* batch sequences depending on which entry
+point you called.  Every solver plan now derives its keys through the
+helpers below, which pin down ONE documented derivation:
+
+    root key  (``as_key(seed_or_key)``)
+      |
+      ├─ single-restart plans (cache x jit x sampler):
+      |     (init_key, fit_key) = split(root)          -- split_init
+      |     step t:  (fit_key, kb_t) = split(fit_key)  -- next_batch_key
+      |     nested sampler: batch t is a pure function of (fit_key, t)
+      |     (``sample_batch_nested``; fit_key itself never advances)
+      |
+      ├─ sharded plans: same (init_key, fit_key) and kb_t stream; each data
+      |     shard then draws its slice from fold_in(kb_t, replica_index)
+      |     -- shard_key.  (The fold is applied even on a 1-shard mesh, so
+      |     sharded trajectories are reproducible across mesh shapes but
+      |     intentionally NOT identical to the single-device stream.)
+      |
+      └─ multi-restart plans:
+            (init_key, fit_key, eval_key) = split(root, 3) -- restart_keys
+            restart r inits from split(init_key, R)[r] and fits from
+            split(fit_key, R)[r]; eval_key draws the shared eval batch.
+
+Consequence: with ``init_idx`` unspecified, the single-device family
+(plain / cached / precomputed / jit, iid sampler) draws *identical* batch
+sequences from the same seed — the Gram-tile-cache equivalence tests rely
+on it being bit-exact.
+
+Legacy note: the deprecated ``fit_*`` shims preserve their historical
+behaviour of NOT consuming an init split when ``init_idx`` is passed
+explicitly (``KernelKMeans`` always splits, so its stream does not depend
+on who drew the init).
+"""
+from __future__ import annotations
+
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+KeyOrSeed = Union[int, jax.Array]
+
+
+def as_key(seed_or_key: KeyOrSeed) -> jax.Array:
+    """Coerce an int seed (or pass through an existing PRNG key)."""
+    if isinstance(seed_or_key, int):
+        return jax.random.PRNGKey(seed_or_key)
+    return seed_or_key
+
+
+def split_init(key: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """``(init_key, fit_key)`` — the one split every single-restart plan
+    performs before touching data.  ``init_key`` seeds the k-means++ /
+    random init draw; ``fit_key`` seeds the batch stream."""
+    init_key, fit_key = jax.random.split(key)
+    return init_key, fit_key
+
+
+def next_batch_key(key: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Advance the fit stream one step: ``(fit_key', kb)``.
+
+    ``kb`` draws iteration t's batch; ``fit_key'`` carries to t+1.  This is
+    the body of every early-stopped loop (host or ``lax.while_loop``)."""
+    key, kb = jax.random.split(key)
+    return key, kb
+
+
+def shard_key(kb: jax.Array, replica_index: jax.Array) -> jax.Array:
+    """Per-data-shard batch key: fold the step's batch key with the shard's
+    flat replica index (``distributed._replica_index``)."""
+    return jax.random.fold_in(kb, replica_index)
+
+
+def restart_keys(key: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """``(init_key, fit_key, eval_key)`` for the multi-restart engine."""
+    k_init, k_fit, k_eval = jax.random.split(key, 3)
+    return k_init, k_fit, k_eval
+
+
+def per_restart(key: jax.Array, restarts: int) -> jax.Array:
+    """(R, 2) independent per-restart keys from an init/fit key."""
+    return jax.random.split(key, restarts)
+
+
+def batch_key_at(key: jax.Array, step: int) -> jax.Array:
+    """The batch key of iteration ``step`` as a pure function of the fit
+    key — O(step) splits, for resumable host pipelines
+    (``repro.data.pipeline.ClusterBatchPipeline(mode='keyed')``)."""
+    kb = key
+    for _ in range(step + 1):
+        key, kb = next_batch_key(key)
+    return kb
+
+
+__all__ = [
+    "as_key", "split_init", "next_batch_key", "shard_key", "restart_keys",
+    "per_restart", "batch_key_at",
+]

@@ -1,0 +1,116 @@
+"""Adapters that run the deprecated ``fit_*`` surfaces through the solver
+plans.
+
+Each legacy entry point maps to exactly one :class:`SolverConfig` point
+(the migration table in ``docs/api.md``); the adapters here keep the
+historical signatures, return shapes and PRNG semantics — in particular
+the legacy behaviour of NOT consuming an init key split when ``init_idx``
+/ ``center_pts`` is passed explicitly (``always_split=False``), so
+pre-existing trajectories are bit-identical through the shims.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.api.config import SolverConfig
+from repro.api.deprecation import warn_legacy  # noqa: F401  (shim import)
+from repro.api.plan import resolve_plan
+
+
+def _solver_config(cfg, kernel, **axes) -> SolverConfig:
+    """Lift an MBConfig + kernel + execution axes into a SolverConfig."""
+    return SolverConfig(
+        k=cfg.k, batch_size=cfg.batch_size, tau=cfg.tau, rate=cfg.rate,
+        sqnorm_mode=cfg.sqnorm_mode, eval_mode=cfg.eval_mode,
+        epsilon=cfg.epsilon, max_iters=cfg.max_iters,
+        use_pallas=cfg.use_pallas, compute_dtype=cfg.compute_dtype,
+        kernel=kernel, **axes)
+
+
+def fit(x, kernel, cfg, key, init="kmeans++", early_stop=True,
+        init_idx=None, weights=None):
+    scfg = _solver_config(cfg, kernel, cache="none", distribution="single",
+                          jit=False, sampler="iid", init=init,
+                          early_stop=early_stop)
+    ex = resolve_plan(scfg, n=x.shape[0], solver="single").executor
+    out = ex.fit(x, key, init_idx=init_idx, sample_weight=weights,
+                 always_split=False)
+    return out.state, out.history
+
+
+def fit_jit(x, kernel, cfg, key, init_idx):
+    scfg = _solver_config(cfg, kernel, cache="none", distribution="single",
+                          jit=True, sampler="iid")
+    ex = resolve_plan(scfg, n=x.shape[0], solver="single").executor
+    out = ex.fit(x, key, init_idx=init_idx, always_split=False)
+    return out.state, out.iters
+
+
+def fit_cached(x, kernel, cfg, key, tile=256, capacity=16,
+               init="kmeans++", early_stop=True, init_idx=None,
+               sampler="uniform", reuse=0.5, refresh=8,
+               store_dtype=jnp.float32):
+    if sampler not in ("uniform", "nested"):
+        raise ValueError(sampler)
+    scfg = _solver_config(
+        cfg, kernel, cache="lru", distribution="single", jit=False,
+        sampler="iid" if sampler == "uniform" else "nested",
+        init=init, early_stop=early_stop, cache_tile=tile,
+        cache_capacity=capacity, cache_dtype=jnp.dtype(store_dtype).name,
+        reuse=reuse, refresh=refresh)
+    ex = resolve_plan(scfg, n=x.shape[0], solver="single_lru").executor
+    out = ex.fit(x, key, init_idx=init_idx, always_split=False)
+    return out.state, out.history, out.cache
+
+
+def fit_distributed(xb_stream, center_pts, kernel, cfg, mesh,
+                    data_axes=("data",), model_axis="model",
+                    early_stop=True):
+    scfg = _solver_config(cfg, kernel, cache="none",
+                          distribution="sharded", jit=False,
+                          early_stop=early_stop,
+                          data_axes=tuple(data_axes),
+                          model_axis=model_axis)
+    ex = resolve_plan(scfg, mesh=mesh, solver="sharded").executor
+    return ex.fit_stream(xb_stream, center_pts, mb=cfg)
+
+
+def fit_distributed_jit(x, center_pts, kernel, cfg, mesh, key,
+                        data_axes=("data",), model_axis="model"):
+    scfg = _solver_config(cfg, kernel, cache="none",
+                          distribution="sharded", jit=True,
+                          data_axes=tuple(data_axes),
+                          model_axis=model_axis)
+    ex = resolve_plan(scfg, n=x.shape[0], mesh=mesh,
+                      solver="sharded").executor
+    out = ex.fit(x, key, center_pts=center_pts, always_split=False,
+                 strict=True)
+    return out.state, out.iters
+
+
+def fit_distributed_cached_jit(x, init_idx, base_kernel, cfg, mesh, key,
+                               tile=256, capacity=16, data_axes=("data",),
+                               model_axis="model", cache_dtype=jnp.float32):
+    scfg = _solver_config(
+        cfg, base_kernel, cache="lru", distribution="sharded", jit=True,
+        data_axes=tuple(data_axes), model_axis=model_axis, cache_tile=tile,
+        cache_capacity=capacity, cache_dtype=jnp.dtype(cache_dtype).name)
+    ex = resolve_plan(scfg, n=x.shape[0], mesh=mesh,
+                      solver="sharded_lru").executor
+    out = ex.fit(x, key, init_idx=init_idx, always_split=False,
+                 strict=True)
+    return out.state, out.caches, out.iters
+
+
+def fit_restarts(x, kernel, cfg, key, restarts, init="kmeans++",
+                 init_idx=None, mesh=None, restart_axis=None,
+                 eval_batch_size=None, share_eval_gram=None, _run=None,
+                 _init_run=None):
+    scfg = _solver_config(
+        cfg, kernel, cache="none", distribution="single", jit=True,
+        restarts=restarts, init=init, restart_axis=restart_axis,
+        eval_batch_size=eval_batch_size, share_eval_gram=share_eval_gram)
+    ex = resolve_plan(scfg, n=x.shape[0], mesh=mesh,
+                      solver="multi_restart").executor
+    out = ex.fit(x, key, init_idx=init_idx, _run=_run, _init_run=_init_run)
+    return out.engine

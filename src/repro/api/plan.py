@@ -1,0 +1,154 @@
+"""Solver-plan registry: map a resolved :class:`SolverConfig` point to an
+executor.
+
+Every execution strategy registers a :class:`SolverSpec` — a predicate
+over resolved configs plus an executor factory.  :func:`resolve_plan`
+resolves the config's ``auto`` axes, then picks the matching spec of
+highest ``(priority, registration order)``.  Config points nobody claims
+raise ``NotImplementedError`` naming :func:`register_solver` — which is
+exactly how the roadmap's fused restart x data x model program lands: as
+one more registration, not a ninth ``fit_*``:
+
+    register_solver(
+        "fused_restart_sharded",
+        matches=lambda c: c.restarts > 1 and c.distribution == "sharded",
+        build=lambda cfg, mesh: FusedExecutor(cfg, mesh))
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional
+
+from repro.api.config import SolverConfig
+from repro.api import executors as _ex
+
+
+@dataclass(frozen=True)
+class SolverSpec:
+    """A registered execution strategy."""
+
+    name: str
+    matches: Callable[[SolverConfig], bool]
+    build: Callable[..., "_ex.Executor"]     # (config, mesh) -> executor
+    priority: int = 0
+    description: str = ""
+
+
+class Plan(NamedTuple):
+    """A resolved execution plan: the concrete config point (no ``auto``
+    axes left) and the executor that runs it."""
+
+    name: str
+    config: SolverConfig
+    executor: "_ex.Executor"
+
+
+_REGISTRY: dict = {}       # name -> (SolverSpec, registration index)
+_COUNTER = [0]
+
+
+def register_solver(name: str, *, matches, build, priority: int = 0,
+                    description: str = "", overwrite: bool = False) -> None:
+    """Register an execution strategy.  Among matching specs the highest
+    ``priority`` wins (ties: most recently registered), so downstream
+    packages can claim config subspaces without touching this module."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"solver {name!r} is already registered "
+                         f"(registered: {list_solvers()}); pass "
+                         "overwrite=True to replace it")
+    _COUNTER[0] += 1
+    _REGISTRY[name] = (SolverSpec(name=name, matches=matches, build=build,
+                                  priority=priority,
+                                  description=description), _COUNTER[0])
+
+
+def unregister_solver(name: str) -> None:
+    if name not in _REGISTRY:
+        raise ValueError(f"solver {name!r} is not registered "
+                         f"(registered: {list_solvers()})")
+    del _REGISTRY[name]
+
+
+def list_solvers() -> list:
+    """Registered solver names, in registration order."""
+    return [n for n, (_, i) in sorted(_REGISTRY.items(),
+                                      key=lambda kv: kv[1][1])]
+
+
+def resolve_plan(config: SolverConfig, *, n: Optional[int] = None,
+                 mesh=None, solver: Optional[str] = None) -> Plan:
+    """Resolve ``config``'s ``auto`` axes for (n, mesh) and build the
+    executor of the best-matching registered solver.  ``solver`` forces a
+    specific registration by name (the legacy shims use it so e.g.
+    ``fit_restarts(restarts=1)`` still lands on the engine)."""
+    resolved = config.resolve(n=n, mesh=mesh)
+    if solver is not None:
+        try:
+            spec, _ = _REGISTRY[solver]
+        except KeyError:
+            raise ValueError(f"unknown solver {solver!r} "
+                             f"(registered: {list_solvers()})") from None
+    else:
+        matching = [(s.priority, order, s)
+                    for s, order in _REGISTRY.values()
+                    if s.matches(resolved)]
+        if not matching:
+            raise NotImplementedError(
+                f"no solver plan matches {resolved.axes_repr()}; this "
+                "combination has no registered executor — register one "
+                "with repro.api.register_solver(name, matches=..., "
+                f"build=...).  Registered solvers: {list_solvers()}")
+        _, _, spec = max(matching, key=lambda t: (t[0], t[1]))
+    return Plan(name=spec.name, config=resolved,
+                executor=spec.build(resolved, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Built-in solvers: one registration per legacy fit_* entry point family.
+
+register_solver(
+    "single",
+    matches=lambda c: (c.distribution == "single" and c.cache == "none"
+                       and c.restarts == 1),
+    build=_ex.SingleExecutor,
+    description="plain Algorithm-2 fit (host loop or one compiled "
+                "while_loop); legacy fit / fit_jit")
+
+register_solver(
+    "single_precomputed",
+    matches=lambda c: (c.distribution == "single"
+                       and c.cache == "precomputed" and c.restarts == 1),
+    build=_ex.PrecomputedExecutor,
+    description="full-Gram precompute then gather-only iterations; legacy "
+                "serve --cache-mode precomputed path")
+
+register_solver(
+    "single_lru",
+    matches=lambda c: (c.distribution == "single" and c.cache == "lru"
+                       and c.restarts == 1),
+    build=_ex.CachedExecutor,
+    description="Gram tile cache fit; legacy fit_cached")
+
+register_solver(
+    "sharded",
+    matches=lambda c: (c.distribution == "sharded" and c.cache == "none"
+                       and c.restarts == 1),
+    build=_ex.ShardedExecutor,
+    description="shard_map data x model fit; legacy fit_distributed / "
+                "fit_distributed_jit")
+
+register_solver(
+    "sharded_lru",
+    matches=lambda c: (c.distribution == "sharded" and c.cache == "lru"
+                       and c.restarts == 1 and c.jit),
+    build=_ex.ShardedCachedExecutor,
+    description="sharded fit with per-shard tile caches; legacy "
+                "fit_distributed_cached_jit")
+
+register_solver(
+    "multi_restart",
+    matches=lambda c: (c.restarts > 1 and c.distribution == "single"
+                       and c.cache == "none"),
+    build=_ex.RestartExecutor,
+    description="best-of-R restarts in one compiled program; legacy "
+                "fit_restarts / MultiRestartEngine")

@@ -1,5 +1,10 @@
 """repro.core — the paper's contribution: mini-batch kernel k-means.
 
+NOTE: the preferred front door is now ``repro.api.KernelKMeans`` +
+``SolverConfig`` (one estimator, registry-driven solver plans — see
+docs/api.md).  The ``fit_*`` entry points below remain as thin
+deprecation shims that delegate to the equivalent plan.
+
 Public API:
     MBConfig, fit, fit_jit, predict          — Algorithm 2 (truncated)
     MultiRestartEngine, fit_restarts         — best-of-R engine (engine.py)
@@ -8,17 +13,20 @@ Public API:
     untruncated.fit                          — Algorithm 1 (DP)
     fullbatch.fit                            — full-batch baseline
     kernel_fns.{Gaussian,Laplacian,...}      — kernel functions
+    kernel_fns.{make_kernel, list_kernels}   — name registry ("rbf", ...)
     init.kmeans_plus_plus                    — kernel k-means++
     metrics.{adjusted_rand_index, normalized_mutual_info}
 """
 from repro.core.kernel_fns import (  # noqa: F401
     Gaussian, Laplacian, Linear, Polynomial, Precomputed, diag_is_one,
-    gamma_of, kernel_cross, kernel_diag, median_sq_dist_heuristic,
-    register_kernel,
+    gamma_of, kernel_cross, kernel_diag, kernel_spec, list_kernels,
+    make_kernel, median_sq_dist_heuristic, register_kernel,
+    register_kernel_factory,
 )
 from repro.core.minibatch import (  # noqa: F401
-    MBConfig, StepInfo, batch_objective, fit, fit_cached, fit_jit,
-    make_step, predict, sample_batch, sample_batch_nested,
+    MBConfig, StepInfo, batch_objective, center_distances_chunked, fit,
+    fit_cached, fit_jit, host_fit_loop, make_step, predict, sample_batch,
+    sample_batch_nested,
 )
 from repro.core.engine import (  # noqa: F401
     EngineResult, MultiRestartEngine, fit_restarts,

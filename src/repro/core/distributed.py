@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.api import keys as api_keys
 from repro.core.compat import shard_map
 from repro.core.kernel_fns import (
     KernelFn, gram_rows_fn, kernel_cross, kernel_diag,
@@ -97,9 +98,39 @@ def shard_dataset(x: jax.Array, mesh: Mesh,
     if x.shape[0] % n_shards:
         raise ValueError(
             f"dataset rows {x.shape[0]} must divide over {n_shards} data "
-            f"shards (drop {x.shape[0] % n_shards} rows; padding would "
-            "leak synthetic points into sampled batches)")
+            f"shards (drop {x.shape[0] % n_shards} rows; naive padding "
+            "would leak synthetic points into sampled batches — "
+            "repro.api.KernelKMeans pads AND masks the per-shard sampler "
+            "automatically via pad_for_mesh + the n_valid sampler bound)")
     return jax.device_put(x, NamedSharding(mesh, P(tuple(data_axes), None)))
+
+
+def pad_for_mesh(x: jax.Array, mesh: Mesh,
+                 data_axes: Sequence[str] = ("data",),
+                 fill: float = 0.0, multiple: int = 1):
+    """Pad ``x`` with ``fill`` rows to a row count divisible over the data
+    shards (and by ``multiple`` — e.g. a Gram cache tile), returning
+    ``(x_padded, n_valid)`` where ``n_valid`` is the real row count.  Feed
+    ``n_valid`` to :func:`make_dist_sampling_step` /
+    :func:`make_cached_dist_sampling_step` so the shard-local samplers mask
+    pad rows out — the fill value then never reaches a batch, a window or
+    a Gram evaluation (tested for fill-independence).  Pad rows all land on
+    the LAST data shard, which therefore needs at least one real row:
+    ``n > (S - 1) * ceil(n_padded / S)`` — violated only when n is tiny
+    relative to the shard count, which raises here."""
+    n = x.shape[0]
+    n_shards = _data_shard_count(mesh, data_axes)
+    pad = (-n) % math.lcm(n_shards, multiple)
+    if pad == 0:
+        return x, n
+    per = (n + pad) // n_shards
+    if n <= (n_shards - 1) * per:
+        raise ValueError(
+            f"cannot pad-and-mask {n} rows over {n_shards} data shards "
+            f"(row multiple {multiple}): the last shard would hold no "
+            "real rows (use fewer shards or more data)")
+    fill_rows = jnp.full((pad,) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([x, fill_rows], axis=0), n
 
 
 def _data_shard_count(mesh: Mesh, data_axes: Sequence[str]) -> int:
@@ -283,26 +314,50 @@ def make_dist_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
         check_rep=False)
 
 
+def _local_sample_bound(mesh: Mesh, data_axes: Sequence[str],
+                        n_loc: int, n_valid: Optional[int]):
+    """Upper sampling bound for this shard's local randint draw.
+
+    ``n_valid=None`` (no padding) keeps the historical static bound — the
+    full local slice.  With ``n_valid`` set (the real global row count of a
+    dataset padded by :func:`pad_for_mesh`), each shard samples only its
+    REAL rows: shard s owns padded rows [s*L, (s+1)*L), of which
+    ``clip(n_valid - s*L, 0, L)`` are real; pad rows (all on the last
+    shard) are masked out of every batch.  Shards with fewer real rows
+    oversample them proportionally — an O(pad/n) stratification skew,
+    traded for never training on synthetic points."""
+    if n_valid is None:
+        return n_loc
+    start = _replica_index(mesh, data_axes) * n_loc
+    return jnp.clip(n_valid - start, 1, n_loc)
+
+
 def make_dist_sampling_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
                             data_axes: Sequence[str] = ("data",),
-                            model_axis: str = "model"):
+                            model_axis: str = "model",
+                            n_valid: Optional[int] = None):
     """Returns step(state, x, key) -> (state, info) where x is the FULL
     dataset row-sharded over the data axes and the batch is sampled
     on-device: each data shard draws b / n_shards rows uniformly from its
     local slice (stratified-uniform over equal shards — same marginal as
-    the paper's uniform-with-replacement model)."""
+    the paper's uniform-with-replacement model).
+
+    ``n_valid``: real row count of a :func:`pad_for_mesh`-padded dataset —
+    masks pad rows out of the shard-local draws (see
+    :func:`_local_sample_bound`)."""
     data_axes = tuple(data_axes)
     n_shards = _data_shard_count(mesh, data_axes)
     if cfg.batch_size % n_shards:
         raise ValueError(f"batch_size {cfg.batch_size} must divide over "
-                         f"{n_shards} data shards")
+                         f"{n_shards} data shards (repro.api.KernelKMeans "
+                         "rounds the batch size up automatically)")
     b_loc = cfg.batch_size // n_shards
     local_step = _make_local_step(kernel, cfg, mesh, data_axes, model_axis)
 
     def sampled(state: DistState, x_loc: jax.Array, key: jax.Array):
-        kb = jax.random.fold_in(key, _replica_index(mesh, data_axes))
-        bidx = jax.random.randint(kb, (b_loc,), 0, x_loc.shape[0],
-                                  dtype=jnp.int32)
+        kb = api_keys.shard_key(key, _replica_index(mesh, data_axes))
+        hi = _local_sample_bound(mesh, data_axes, x_loc.shape[0], n_valid)
+        bidx = jax.random.randint(kb, (b_loc,), 0, hi, dtype=jnp.int32)
         return local_step(state, x_loc[bidx])
 
     state_specs = _state_specs(model_axis)
@@ -315,13 +370,13 @@ def make_dist_sampling_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
         check_rep=False)
 
 
-def fit_distributed(xb_stream, center_pts: jax.Array, kernel: KernelFn,
-                    cfg: MBConfig, mesh: Mesh,
-                    data_axes: Sequence[str] = ("data",),
-                    model_axis: str = "model",
-                    early_stop: bool = True):
-    """Drive the sharded step from a host iterator of (b, d) batches —
-    this is `cluster_hidden_states` when the iterator yields LM activations."""
+def _fit_distributed_impl(xb_stream, center_pts: jax.Array,
+                          kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
+                          data_axes: Sequence[str] = ("data",),
+                          model_axis: str = "model",
+                          early_stop: bool = True):
+    """Stream-driven sharded fit loop (shared by the ``sharded`` host plan
+    and :func:`cluster_hidden_states`)."""
     from repro.core.state import window_size
 
     w = window_size(cfg.batch_size, cfg.tau)
@@ -345,6 +400,30 @@ def fit_distributed(xb_stream, center_pts: jax.Array, kernel: KernelFn,
     return state, history
 
 
+def fit_distributed(xb_stream, center_pts: jax.Array, kernel: KernelFn,
+                    cfg: MBConfig, mesh: Mesh,
+                    data_axes: Sequence[str] = ("data",),
+                    model_axis: str = "model",
+                    early_stop: bool = True):
+    """Drive the sharded step from a host iterator of (b, d) batches —
+    this is `cluster_hidden_states` when the iterator yields LM activations.
+
+    .. deprecated::
+        Use :class:`repro.api.KernelKMeans` with
+        ``SolverConfig(distribution="sharded", jit=False)`` (the estimator
+        samples its batches through the unified key stream) — this shim
+        resolves exactly that plan and delegates the stream to it.
+    """
+    from repro.api import legacy as _legacy
+    _legacy.warn_legacy(
+        "repro.core.distributed.fit_distributed",
+        "KernelKMeans(SolverConfig(distribution='sharded', jit=False))")
+    return _legacy.fit_distributed(xb_stream, center_pts, kernel, cfg, mesh,
+                                   data_axes=data_axes,
+                                   model_axis=model_axis,
+                                   early_stop=early_stop)
+
+
 def fit_distributed_jit(x: jax.Array, center_pts: jax.Array,
                         kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
                         key: jax.Array,
@@ -354,26 +433,21 @@ def fit_distributed_jit(x: jax.Array, center_pts: jax.Array,
     mesh, batches are sampled shard-locally, and the whole early-stopped loop
     is ONE compiled program — zero per-step host sync (the production path).
 
+    .. deprecated::
+        Use :class:`repro.api.KernelKMeans` with
+        ``SolverConfig(distribution="sharded", jit=True)`` — this shim
+        resolves exactly that plan and delegates to it (the estimator
+        additionally pads-and-masks non-divisible datasets and caches the
+        compiled program across fits).
+
     Returns (state, iters) like :func:`repro.core.minibatch.fit_jit`."""
-    from repro.core.state import window_size
-
-    w = window_size(cfg.batch_size, cfg.tau)
-    state0 = jax.device_put(init_dist_state(center_pts, kernel, w),
-                            state_shardings(mesh, model_axis))
-    xs = shard_dataset(x, mesh, data_axes)
-    step = make_dist_sampling_step(kernel, cfg, mesh, data_axes, model_axis)
-
-    from repro.core.minibatch import run_early_stopped
-
-    @jax.jit
-    def run(state, x, key):
-        def step_with_key(state, kb):
-            state, info = step(state, x, kb)
-            return state, info.improvement
-
-        return run_early_stopped(cfg, step_with_key, state, key)
-
-    return run(state0, xs, key)
+    from repro.api import legacy as _legacy
+    _legacy.warn_legacy(
+        "repro.core.distributed.fit_distributed_jit",
+        "KernelKMeans(SolverConfig(distribution='sharded', jit=True))")
+    return _legacy.fit_distributed_jit(x, center_pts, kernel, cfg, mesh,
+                                       key, data_axes=data_axes,
+                                       model_axis=model_axis)
 
 
 # --------------------------------------------------------------------------
@@ -411,7 +485,8 @@ def init_shard_caches(mesh: Mesh, n: int, tile: int, capacity: int,
 def make_cached_dist_sampling_step(base_kernel: KernelFn, x_real: jax.Array,
                                    cfg: MBConfig, mesh: Mesh,
                                    data_axes: Sequence[str] = ("data",),
-                                   model_axis: str = "model"):
+                                   model_axis: str = "model",
+                                   n_valid: Optional[int] = None):
     """Cached variant of :func:`make_dist_sampling_step`: returns
     step(state, caches, x_idx, key) -> (state, caches, info), where x_idx is
     the (n, 1) index-data dataset row-sharded over ``data_axes`` and
@@ -433,14 +508,15 @@ def make_cached_dist_sampling_step(base_kernel: KernelFn, x_real: jax.Array,
     n_shards = _data_shard_count(mesh, data_axes)
     if cfg.batch_size % n_shards:
         raise ValueError(f"batch_size {cfg.batch_size} must divide over "
-                         f"{n_shards} data shards")
+                         f"{n_shards} data shards (repro.api.KernelKMeans "
+                         "rounds the batch size up automatically)")
     b_loc = cfg.batch_size // n_shards
 
     def cached_sampled(state: DistState, caches, x_loc: jax.Array,
                        key: jax.Array):
-        kb = jax.random.fold_in(key, _replica_index(mesh, data_axes))
-        bidx = jax.random.randint(kb, (b_loc,), 0, x_loc.shape[0],
-                                  dtype=jnp.int32)
+        kb = api_keys.shard_key(key, _replica_index(mesh, data_axes))
+        hi = _local_sample_bound(mesh, data_axes, x_loc.shape[0], n_valid)
+        bidx = jax.random.randint(kb, (b_loc,), 0, hi, dtype=jnp.int32)
         xb_loc = x_loc[bidx]                       # (b_loc, 1) global ids
         # Warm set = FULL batch + this shard's current window rows: the
         # local step all_gathers the batch into the center windows, so
@@ -492,41 +568,26 @@ def fit_distributed_cached_jit(x: jax.Array, init_idx: jax.Array,
     every data shard carries a Gram tile cache in the while_loop state —
     repeated rows across sampled batches stop re-evaluating the kernel.
 
+    .. deprecated::
+        Use :class:`repro.api.KernelKMeans` with
+        ``SolverConfig(distribution="sharded", cache="lru", jit=True)`` —
+        this shim resolves exactly that plan and delegates to it.
+
     ``x``: (n, d) real coordinates; ``init_idx``: (k,) initial center row
     indices.  Sampling is identical to the uncached path (same fold_in /
     randint stream), so trajectories are numerically equivalent.
     Returns (state, caches, iters); ``repro.cache.stats`` on a
     ``jax.tree.map(lambda a: a[s], caches)`` slice reports shard s's
     hit/miss telemetry."""
-    from repro.cache.cached_kernel import make_cached
-    from repro.core.minibatch import run_early_stopped
-    from repro.core.state import window_size
-
-    data_axes = tuple(data_axes)
-    ck0, xi = make_cached(base_kernel, x, tile=tile, capacity=capacity,
-                          dtype=cache_dtype)
-    w = window_size(cfg.batch_size, cfg.tau)
-    center_data = xi[init_idx]                      # (k, 1) index-data
-    state0 = jax.device_put(init_dist_state(center_data, ck0, w),
-                            state_shardings(mesh, model_axis))
-    xs = shard_dataset(xi, mesh, data_axes)
-    caches0 = init_shard_caches(mesh, x.shape[0], tile, capacity,
-                                data_axes, cache_dtype)
-    step = make_cached_dist_sampling_step(
-        base_kernel, x, cfg, mesh, data_axes, model_axis)
-
-    @jax.jit
-    def run(state, caches, x_idx, key):
-        def step_with_key(carry, kb):
-            st, cc = carry
-            st, cc, info = step(st, cc, x_idx, kb)
-            return (st, cc), info.improvement
-
-        (state, caches), iters = run_early_stopped(
-            cfg, step_with_key, (state, caches), key)
-        return state, caches, iters
-
-    return run(state0, caches0, xs, key)
+    from repro.api import legacy as _legacy
+    _legacy.warn_legacy(
+        "repro.core.distributed.fit_distributed_cached_jit",
+        "KernelKMeans(SolverConfig(distribution='sharded', cache='lru', "
+        "jit=True))")
+    return _legacy.fit_distributed_cached_jit(
+        x, init_idx, base_kernel, cfg, mesh, key, tile=tile,
+        capacity=capacity, data_axes=data_axes, model_axis=model_axis,
+        cache_dtype=cache_dtype)
 
 
 def dist_to_center_state(dst: DistState) -> CenterState:
@@ -611,4 +672,4 @@ def cluster_hidden_states(activations_iter, k: int, kernel: KernelFn,
     if init_batch is None:
         import itertools
         it = itertools.chain([first], it)
-    return fit_distributed(it, center_pts, kernel, cfg, mesh, **kw)
+    return _fit_distributed_impl(it, center_pts, kernel, cfg, mesh, **kw)

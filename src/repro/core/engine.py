@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from repro.api import keys as api_keys
 from repro.core import init as init_lib
 from repro.core.kernel_fns import KernelFn, diag_of
 from repro.core.minibatch import (
@@ -73,34 +74,28 @@ def make_init_run(kernel: KernelFn, cfg: MBConfig, init: str = "kmeans++"):
     return jax.jit(jax.vmap(one, in_axes=(0, None)))
 
 
-def fit_restarts(x: jax.Array, kernel: KernelFn, cfg: MBConfig,
-                 key: jax.Array, restarts: int,
-                 init: str = "kmeans++",
-                 init_idx: Optional[jax.Array] = None,
-                 mesh: Optional[Mesh] = None,
-                 restart_axis: Optional[str] = None,
-                 eval_batch_size: Optional[int] = None,
-                 share_eval_gram: Optional[bool] = None,
-                 _run=None, _init_run=None) -> EngineResult:
-    """Run R independent mini-batch kernel k-means fits in one compiled
-    program and return the best (plus per-restart diagnostics).
-
-    ``init_idx``: optional (R, k) precomputed initial center indices —
-    otherwise R independent k-means++ (or random) draws are made, vmapped
-    on-device.  With ``mesh``, R must be divisible by the restart-axis size
-    (see ``launch.mesh.make_restart_mesh``).
-    """
+def _fit_restarts(x: jax.Array, kernel: KernelFn, cfg: MBConfig,
+                  key: jax.Array, restarts: int,
+                  init: str = "kmeans++",
+                  init_idx: Optional[jax.Array] = None,
+                  mesh: Optional[Mesh] = None,
+                  restart_axis: Optional[str] = None,
+                  eval_batch_size: Optional[int] = None,
+                  share_eval_gram: Optional[bool] = None,
+                  _run=None, _init_run=None) -> EngineResult:
+    """Implementation behind :func:`fit_restarts` and the ``multi_restart``
+    solver plan (repro.api.executors)."""
     n = x.shape[0]
-    k_init, k_fit, k_eval = jax.random.split(key, 3)
+    k_init, k_fit, k_eval = api_keys.restart_keys(key)
     if init_idx is None:
-        ikeys = jax.random.split(k_init, restarts)
+        ikeys = api_keys.per_restart(k_init, restarts)
         draw = _init_run if _init_run is not None \
             else make_init_run(kernel, cfg, init)
         init_idx = draw(ikeys, x)
     if init_idx.shape[0] != restarts:
         raise ValueError(f"init_idx has {init_idx.shape[0]} rows, "
                          f"expected {restarts}")
-    fit_keys = jax.random.split(k_fit, restarts)
+    fit_keys = api_keys.per_restart(k_fit, restarts)
     eb = eval_batch_size or min(4 * cfg.batch_size, n)
     eval_idx = sample_batch(k_eval, n, eb)
 
@@ -117,6 +112,39 @@ def fit_restarts(x: jax.Array, kernel: KernelFn, cfg: MBConfig,
     run = _run if _run is not None \
         else make_restart_run(kernel, cfg, share_eval_gram)
     return run(x, fit_keys, init_idx, eval_idx)
+
+
+def fit_restarts(x: jax.Array, kernel: KernelFn, cfg: MBConfig,
+                 key: jax.Array, restarts: int,
+                 init: str = "kmeans++",
+                 init_idx: Optional[jax.Array] = None,
+                 mesh: Optional[Mesh] = None,
+                 restart_axis: Optional[str] = None,
+                 eval_batch_size: Optional[int] = None,
+                 share_eval_gram: Optional[bool] = None,
+                 _run=None, _init_run=None) -> EngineResult:
+    """Run R independent mini-batch kernel k-means fits in one compiled
+    program and return the best (plus per-restart diagnostics).
+
+    .. deprecated::
+        Use :class:`repro.api.KernelKMeans` with
+        ``SolverConfig(restarts=R)`` — this shim resolves exactly that plan
+        and delegates to it (the estimator additionally caches the compiled
+        R-restart program across fits, like ``MultiRestartEngine`` does).
+
+    ``init_idx``: optional (R, k) precomputed initial center indices —
+    otherwise R independent k-means++ (or random) draws are made, vmapped
+    on-device.  With ``mesh``, R must be divisible by the restart-axis size
+    (see ``launch.mesh.make_restart_mesh``).
+    """
+    from repro.api import legacy as _legacy
+    _legacy.warn_legacy("repro.core.fit_restarts",
+                        "KernelKMeans(SolverConfig(restarts=R))")
+    return _legacy.fit_restarts(
+        x, kernel, cfg, key, restarts, init=init, init_idx=init_idx,
+        mesh=mesh, restart_axis=restart_axis,
+        eval_batch_size=eval_batch_size, share_eval_gram=share_eval_gram,
+        _run=_run, _init_run=_init_run)
 
 
 def make_restart_run(kernel: KernelFn, cfg: MBConfig,
@@ -196,11 +224,18 @@ class MultiRestartEngine:
         self._init_run = None  # compiled init-draw cache
 
     def fit(self, x: jax.Array, key: jax.Array) -> EngineResult:
+        """.. deprecated::
+            Use :class:`repro.api.KernelKMeans` with
+            ``SolverConfig(restarts=R)`` — it caches the compiled program
+            the same way and serves ``predict`` through the same paths."""
+        from repro.api import legacy as _legacy
+        _legacy.warn_legacy("repro.core.engine.MultiRestartEngine.fit",
+                            "KernelKMeans(SolverConfig(restarts=R))")
         if self._run is None:
             self._run = make_restart_run(self.kernel, self.cfg,
                                          self.share_eval_gram)
             self._init_run = make_init_run(self.kernel, self.cfg, self.init)
-        self.result = fit_restarts(
+        self.result = _fit_restarts(
             x, self.kernel, self.cfg, key, self.restarts, init=self.init,
             mesh=self.mesh, restart_axis=self.restart_axis,
             eval_batch_size=self.eval_batch_size, _run=self._run,

@@ -66,3 +66,16 @@ def kmeans_plus_plus_subsampled(key: jax.Array, x: jax.Array, k: int,
 
 def random_init(key: jax.Array, n: int, k: int) -> jax.Array:
     return jax.random.choice(key, n, (k,), replace=False).astype(jnp.int32)
+
+
+def draw_init(key: jax.Array, x: jax.Array, k: int, kernel: KernelFn,
+              method: str = "kmeans++") -> jax.Array:
+    """The one init-drawing entry every fit path shares (it used to be
+    copy-pasted across ``fit`` / ``fit_cached`` / the engine): dispatch on
+    the method name, return (k,) int32 indices into ``x``."""
+    if method == "kmeans++":
+        return kmeans_plus_plus(key, x, k, kernel)
+    if method == "random":
+        return random_init(key, x.shape[0], k)
+    raise ValueError(f"unknown init method {method!r} "
+                     "(expected 'kmeans++' or 'random')")

@@ -58,9 +58,69 @@ _EXT_DIAG: dict = {}
 _EXT_DIAG_ONE: dict = {}
 _EXT_ROWS: dict = {}
 
+# Name registry: ``SolverConfig(kernel="rbf")`` strings resolve to kernel
+# instances through these factories (repro.api's single front door).
+_KERNEL_FACTORIES: dict = {}
+
+
+def register_kernel_factory(name: str, factory, *,
+                            overwrite: bool = False) -> None:
+    """Register a kernel *name* -> factory, so config strings like
+    ``SolverConfig(kernel="rbf")`` resolve through :func:`make_kernel`.
+    Duplicate names are an error (two packages silently fighting over
+    "rbf" would flip numerics under users' feet) unless ``overwrite``."""
+    key = name.lower()
+    if key in _KERNEL_FACTORIES and not overwrite:
+        raise ValueError(
+            f"kernel name {name!r} is already registered "
+            f"(registered names: {', '.join(list_kernels())}); pick a "
+            "distinct name or pass overwrite=True to replace it")
+    _KERNEL_FACTORIES[key] = factory
+
+
+def list_kernels() -> list:
+    """Sorted names accepted by :func:`make_kernel` / ``SolverConfig.kernel``."""
+    return sorted(_KERNEL_FACTORIES)
+
+
+def make_kernel(spec, **params):
+    """Resolve a kernel spec: a string name goes through the factory
+    registry (with ``params`` forwarded); a kernel pytree passes through
+    unchanged (``params`` must then be empty)."""
+    if not isinstance(spec, str):
+        if params:
+            raise ValueError("kernel_params given with an already-built "
+                             f"kernel instance ({type(spec).__name__})")
+        return spec
+    try:
+        factory = _KERNEL_FACTORIES[spec.lower()]
+    except KeyError:
+        raise ValueError(f"unknown kernel {spec!r}; registered kernels: "
+                         f"{list_kernels()}") from None
+    return factory(**params)
+
+
+def kernel_spec(k: "KernelFn"):
+    """``(name, params)`` round-trippable through :func:`make_kernel` — the
+    serialization hook ``KernelKMeans.save`` uses.  Only coordinate kernels
+    with scalar params serialize; data-carrying kernels (Precomputed,
+    CachedKernel) raise."""
+    if isinstance(k, Gaussian):
+        return "rbf", {"kappa": float(k.kappa)}
+    if isinstance(k, Laplacian):
+        return "laplacian", {"kappa": float(k.kappa)}
+    if isinstance(k, Polynomial):
+        return "polynomial", {"bias": float(k.bias), "scale": float(k.scale),
+                              "degree": int(k.degree)}
+    if isinstance(k, Linear):
+        return "linear", {}
+    raise ValueError(f"kernel {type(k).__name__} has no serializable spec "
+                     "(data-carrying kernels cannot be saved by name)")
+
 
 def register_kernel(cls, *, cross, diag, diag_one=None,
-                    gram_rows=None) -> None:
+                    gram_rows=None, name=None, factory=None,
+                    overwrite: bool = False) -> None:
     """Register an out-of-module kernel type.
 
     ``cross(k, x, y) -> (m, n)`` and ``diag(k, x) -> (m,)`` implement the
@@ -71,13 +131,20 @@ def register_kernel(cls, *, cross, diag, diag_one=None,
     hook the hot paths use to restructure per-center loops into one
     row-resolve plus pure gathers (see :func:`gram_rows_fn`).  Keeping the
     capability in this registry means repro.core never names extension
-    kernel types."""
+    kernel types.
+
+    ``name`` (optional) additionally registers the type under a config
+    string (see :func:`register_kernel_factory`); ``factory`` defaults to
+    the class itself."""
     _EXT_CROSS[cls] = cross
     _EXT_DIAG[cls] = diag
     if diag_one is not None:
         _EXT_DIAG_ONE[cls] = diag_one
     if gram_rows is not None:
         _EXT_ROWS[cls] = gram_rows
+    if name is not None:
+        register_kernel_factory(name, factory if factory is not None
+                                else cls, overwrite=overwrite)
 
 
 def gram_rows_fn(k: "KernelFn"):
@@ -164,6 +231,23 @@ def diag_of(k: KernelFn, x: jax.Array) -> jax.Array:
 def gamma_of(k: KernelFn, x: jax.Array) -> jax.Array:
     """gamma = max_x ||phi(x)|| = sqrt(max_x K(x, x)) — Theorem 1's parameter."""
     return jnp.sqrt(jnp.max(kernel_diag(k, x)))
+
+
+# Built-in kernels under their config names ("rbf" is the sklearn-style
+# alias for the paper's normalized Gaussian).
+register_kernel_factory("rbf", lambda kappa=1.0: Gaussian(
+    kappa=jnp.float32(kappa)))
+register_kernel_factory("gaussian", lambda kappa=1.0: Gaussian(
+    kappa=jnp.float32(kappa)))
+register_kernel_factory("laplacian", lambda kappa=1.0: Laplacian(
+    kappa=jnp.float32(kappa)))
+register_kernel_factory("polynomial", lambda bias=1.0, scale=1.0, degree=3:
+                        Polynomial(bias=jnp.float32(bias),
+                                   scale=jnp.float32(scale),
+                                   degree=int(degree)))
+register_kernel_factory("linear", lambda: Linear())
+register_kernel_factory("precomputed", lambda gram: Precomputed(
+    gram=jnp.asarray(gram)))
 
 
 def median_sq_dist_heuristic(x: jax.Array, sample: int = 1024) -> jax.Array:

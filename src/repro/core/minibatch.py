@@ -24,7 +24,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import init as init_lib
+from repro.api import keys as api_keys
 from repro.core.kernel_fns import (
     KernelFn, diag_of, gram_rows_fn, kernel_cross,
 )
@@ -295,47 +295,70 @@ def sample_batch_nested(key: jax.Array, step, n: int, b: int,
     return jnp.concatenate([head, tail])
 
 
+def host_fit_loop(step, n: int, cfg: MBConfig, state, key: jax.Array,
+                  probs: Optional[jax.Array] = None,
+                  early_stop: bool = True, sampler: str = "iid",
+                  reuse: float = 0.5, refresh: int = 8, step0: int = 0):
+    """The host-driven early-stopped driver shared by every non-jit fit
+    path (plain / weighted / cached): per iteration draw the batch indices
+    from the unified key stream (:mod:`repro.api.keys`), apply
+    ``step(state, batch_idx) -> (state, StepInfo)``, and stop when the
+    improvement drops below epsilon.
+
+    ``sampler='iid'`` advances the stream (``next_batch_key``) each step;
+    ``'nested'`` batches are pure functions of ``(key, step)`` and leave
+    the stream untouched.  ``step0`` offsets the iteration counter so
+    ``partial_fit`` resumption continues both the nested schedule and the
+    history numbering.  Returns ``(state, history, key)`` — the carried key
+    resumes the stream exactly (``KernelKMeans.partial_fit``)."""
+    if sampler not in ("iid", "nested"):
+        raise ValueError(sampler)
+    if sampler == "nested" and probs is not None:
+        raise NotImplementedError("the nested sampler draws unweighted "
+                                  "batches; sample weights need "
+                                  "sampler='iid'")
+    history = []
+    for i in range(step0, step0 + cfg.max_iters):
+        if sampler == "iid":
+            key, kb = api_keys.next_batch_key(key)
+            bidx = (sample_batch(kb, n, cfg.batch_size) if probs is None
+                    else sample_batch_weighted(kb, probs, cfg.batch_size))
+        else:
+            bidx = sample_batch_nested(key, i, n, cfg.batch_size,
+                                       reuse=reuse, refresh=refresh)
+        state, info = step(state, bidx)
+        imp = float(info.improvement)
+        history.append(dict(step=i, f_before=float(info.f_before),
+                            f_after=float(info.f_after), improvement=imp))
+        if early_stop and imp < cfg.epsilon:
+            break
+    return state, history, key
+
+
 def fit(x: jax.Array, kernel: KernelFn, cfg: MBConfig, key: jax.Array,
         init: str = "kmeans++", early_stop: bool = True,
         init_idx: Optional[jax.Array] = None,
         weights: Optional[jax.Array] = None):
     """Host-driven fit loop with the paper's early-stopping condition.
 
+    .. deprecated::
+        Use :class:`repro.api.KernelKMeans` with
+        ``SolverConfig(cache="none", distribution="single", jit=False)`` —
+        this shim resolves exactly that plan and delegates to it.
+
     ``weights``: optional (n,) positive point weights (footnote 1) —
     implemented as weighted batch sampling, see sample_batch_weighted.
     Returns (state, history) where history is a list of per-step StepInfo
     (as numpy scalars) — benchmarks consume it directly.
     """
-    n = x.shape[0]
-    probs = None
-    if weights is not None:
-        probs = jnp.asarray(weights, jnp.float32)
-        probs = probs / jnp.sum(probs)
-    if init_idx is None:
-        kinit, key = jax.random.split(key)
-        if init == "kmeans++":
-            init_idx = init_lib.kmeans_plus_plus(kinit, x, cfg.k, kernel)
-        elif init == "random":
-            init_idx = init_lib.random_init(kinit, n, cfg.k)
-        else:
-            raise ValueError(init)
-    w = window_size(cfg.batch_size, cfg.tau)
-    state = init_state(x, init_idx, kernel, w)
-
-    step = jax.jit(make_step(kernel, cfg), donate_argnums=(0,))
-
-    history = []
-    for i in range(cfg.max_iters):
-        key, kb = jax.random.split(key)
-        bidx = (sample_batch(kb, n, cfg.batch_size) if probs is None
-                else sample_batch_weighted(kb, probs, cfg.batch_size))
-        state, info = step(state, x, bidx)
-        imp = float(info.improvement)
-        history.append(dict(step=i, f_before=float(info.f_before),
-                            f_after=float(info.f_after), improvement=imp))
-        if early_stop and imp < cfg.epsilon:
-            break
-    return state, history
+    from repro.api import legacy as _legacy
+    _legacy.warn_legacy(
+        "repro.core.fit",
+        "KernelKMeans(SolverConfig(cache='none', distribution='single', "
+        "jit=False))")
+    return _legacy.fit(x, kernel, cfg, key, init=init,
+                       early_stop=early_stop, init_idx=init_idx,
+                       weights=weights)
 
 
 def fit_cached(x: jax.Array, kernel: KernelFn, cfg: MBConfig, key: jax.Array,
@@ -345,6 +368,11 @@ def fit_cached(x: jax.Array, kernel: KernelFn, cfg: MBConfig, key: jax.Array,
                sampler: str = "uniform", reuse: float = 0.5,
                refresh: int = 8, store_dtype=jnp.float32):
     """Cache-accelerated host-driven fit (the Gram-tile-cache fit path).
+
+    .. deprecated::
+        Use :class:`repro.api.KernelKMeans` with
+        ``SolverConfig(cache="lru", sampler="iid"|"nested")`` — this shim
+        resolves exactly that plan and delegates to it.
 
     Per iteration: warm the tile cache with the batch + window rows (only
     MISSING row blocks evaluate the kernel; the nested sampler keeps that
@@ -359,71 +387,26 @@ def fit_cached(x: jax.Array, kernel: KernelFn, cfg: MBConfig, key: jax.Array,
     hit/miss/eviction counters, and serves ``predict`` /
     ``predict_cached`` directly.
     """
-    from repro import cache as cache_lib
-
-    n = x.shape[0]
-    if init_idx is None:
-        kinit, key = jax.random.split(key)
-        if init == "kmeans++":
-            init_idx = init_lib.kmeans_plus_plus(kinit, x, cfg.k, kernel)
-        elif init == "random":
-            init_idx = init_lib.random_init(kinit, n, cfg.k)
-        else:
-            raise ValueError(init)
-    if sampler not in ("uniform", "nested"):
-        raise ValueError(sampler)
-    if cfg.sqnorm_mode != "recompute" or cfg.eval_mode != "direct":
-        # the incremental/delta variants evaluate cross-kernels inside
-        # per-center vmaps, where cached lookups degrade to select (both
-        # branches run) — correct but strictly slower than uncached
-        raise ValueError("fit_cached supports the paper-faithful "
-                         "sqnorm_mode='recompute' / eval_mode='direct' "
-                         "(per-center vmapped kernel evals defeat the "
-                         "cache's cond-skip)")
-
-    ck, xi = cache_lib.make_cached(kernel, x, tile=tile, capacity=capacity,
-                                   dtype=store_dtype)
-    w = window_size(cfg.batch_size, cfg.tau)
-    state = init_state(xi, init_idx, ck, w)
-    nested_key = key
-
-    def _cached_step(state, cache, xr, xi, batch_idx):
-        # only (state, cache) are donated — the dataset and base kernel
-        # buffers stay owned by the caller
-        need = jnp.concatenate([batch_idx.astype(jnp.int32),
-                                state.idx.reshape(-1)])
-        from repro.cache.tile_cache import warm
-        cache = warm(cache, kernel, xr, need)
-        ck_t = cache_lib.CachedKernel(base=kernel, x=xr, cache=cache)
-        st, info = make_step(ck_t, cfg)(state, xi, batch_idx)
-        return st, cache, info
-
-    step = jax.jit(_cached_step, donate_argnums=(0, 1))
-
-    cache = ck.cache
-    history = []
-    for i in range(cfg.max_iters):
-        if sampler == "uniform":
-            key, kb = jax.random.split(key)
-            bidx = sample_batch(kb, n, cfg.batch_size)
-        else:
-            bidx = sample_batch_nested(nested_key, i, n, cfg.batch_size,
-                                       reuse=reuse, refresh=refresh)
-        state, cache, info = step(state, cache, x, xi, bidx)
-        imp = float(info.improvement)
-        history.append(dict(step=i, f_before=float(info.f_before),
-                            f_after=float(info.f_after), improvement=imp))
-        if early_stop and imp < cfg.epsilon:
-            break
-    return state, history, ck._replace(cache=cache)
+    from repro.api import legacy as _legacy
+    _legacy.warn_legacy(
+        "repro.core.fit_cached",
+        "KernelKMeans(SolverConfig(cache='lru'))")
+    return _legacy.fit_cached(x, kernel, cfg, key, tile=tile,
+                              capacity=capacity, init=init,
+                              early_stop=early_stop, init_idx=init_idx,
+                              sampler=sampler, reuse=reuse, refresh=refresh,
+                              store_dtype=store_dtype)
 
 
-def run_early_stopped(cfg: MBConfig, step_with_key, state, key: jax.Array):
+def run_early_stopped_keyed(cfg: MBConfig, step_with_key, state,
+                            key: jax.Array):
     """The paper's on-device early-stopped driver, shared by every fit path
     (fit_jit, the multi-restart engine, the distributed loop): while
-    i < max_iters and the last improvement >= epsilon, split the key and
-    apply ``step_with_key(state, kb) -> (state, improvement)``.
-    Returns (state, iters)."""
+    i < max_iters and the last improvement >= epsilon, advance the unified
+    batch-key stream (:func:`repro.api.keys.next_batch_key`) and apply
+    ``step_with_key(state, kb) -> (state, improvement)``.
+    Returns (state, iters, key) — the carried key resumes the stream
+    exactly where the loop stopped (``KernelKMeans.partial_fit``)."""
 
     def cond(carry):
         _, _, i, imp = carry
@@ -431,13 +414,20 @@ def run_early_stopped(cfg: MBConfig, step_with_key, state, key: jax.Array):
 
     def body(carry):
         state, key, i, _ = carry
-        key, kb = jax.random.split(key)
+        key, kb = api_keys.next_batch_key(key)
         state, imp = step_with_key(state, kb)
         return state, key, i + 1, imp
 
     init_carry = (state, key, jnp.zeros((), jnp.int32),
                   jnp.full((), jnp.inf, jnp.float32))
-    state, _, iters, _ = jax.lax.while_loop(cond, body, init_carry)
+    state, key, iters, _ = jax.lax.while_loop(cond, body, init_carry)
+    return state, iters, key
+
+
+def run_early_stopped(cfg: MBConfig, step_with_key, state, key: jax.Array):
+    """:func:`run_early_stopped_keyed` without the carried key — the
+    historical signature, kept for callers that never resume."""
+    state, iters, _ = run_early_stopped_keyed(cfg, step_with_key, state, key)
     return state, iters
 
 
@@ -456,12 +446,19 @@ def sampled_step_with_key(step, x: jax.Array, cfg: MBConfig):
 def fit_jit(x: jax.Array, kernel: KernelFn, cfg: MBConfig, key: jax.Array,
             init_idx: jax.Array):
     """Fully-on-device fit: lax.while_loop with the stopping condition in the
-    loop — no per-step host sync (the production/TPU path)."""
-    w = window_size(cfg.batch_size, cfg.tau)
-    state0 = init_state(x, init_idx, kernel, w)
-    step = make_step(kernel, cfg)
-    return run_early_stopped(cfg, sampled_step_with_key(step, x, cfg),
-                             state0, key)
+    loop — no per-step host sync (the production/TPU path).
+
+    .. deprecated::
+        Use :class:`repro.api.KernelKMeans` with ``SolverConfig(jit=True)``
+        — this shim resolves exactly that plan and delegates to it (the
+        estimator additionally caches the compiled program across fits).
+    """
+    from repro.api import legacy as _legacy
+    _legacy.warn_legacy(
+        "repro.core.fit_jit",
+        "KernelKMeans(SolverConfig(cache='none', distribution='single', "
+        "jit=True))")
+    return _legacy.fit_jit(x, kernel, cfg, key, init_idx)
 
 
 def assign_chunked(kernel: KernelFn, coef: jax.Array, sqnorm: jax.Array,
@@ -483,6 +480,27 @@ def assign_chunked(kernel: KernelFn, coef: jax.Array, sqnorm: jax.Array,
     xp = jnp.pad(xq, ((0, pad),) + ((0, 0),) * (xq.ndim - 1))
     out = jax.lax.map(one_chunk, xp.reshape(-1, chunk, *xq.shape[1:]))
     return out.reshape(-1)[:nq]
+
+
+def center_distances_chunked(kernel: KernelFn, coef: jax.Array,
+                             sqnorm: jax.Array, sup: jax.Array,
+                             xq: jax.Array, chunk: int) -> jax.Array:
+    """Chunked feature-space distances d(x, C_j) against explicit (k*W, d)
+    support points, (nq, k) — the ``KernelKMeans.transform`` / ``score``
+    kernel.  Same distance expression as :func:`assign_chunked` (which only
+    keeps the argmin)."""
+    k, w = coef.shape
+
+    def one_chunk(xc):
+        cross = kernel_cross(kernel, xc, sup).reshape(xc.shape[0], k, w)
+        p = jnp.einsum("bkw,kw->bk", cross, coef)
+        return diag_of(kernel, xc)[:, None] - 2.0 * p + sqnorm[None, :]
+
+    nq = xq.shape[0]
+    pad = (-nq) % chunk
+    xp = jnp.pad(xq, ((0, pad),) + ((0, 0),) * (xq.ndim - 1))
+    out = jax.lax.map(one_chunk, xp.reshape(-1, chunk, *xq.shape[1:]))
+    return out.reshape(-1, k)[:nq]
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

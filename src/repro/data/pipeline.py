@@ -66,18 +66,46 @@ class ClusterBatchPipeline:
     refresh only every ``refresh`` steps (staggered by position), the tail
     is fresh each step — consecutive batches share most rows, which keeps
     the Gram tile cache (repro.cache) hot in the serving/fit loop.
-    Marginally each position is still uniform over the dataset."""
+    Marginally each position is still uniform over the dataset.
+    ``mode='keyed'`` draws batch t with ``repro.core.minibatch
+    .sample_batch`` keyed by the t-th key of the UNIFIED fit-key stream
+    (``repro.api.keys``) — the host-driven sharded solver plan feeds this
+    stream to the shard_map step, so its batches match what the on-device
+    plans would draw from the same fit key.  Still pure in (key, step): a
+    sequential cursor makes in-order access O(1), random access replays
+    the split chain."""
 
     def __init__(self, x: np.ndarray, batch: int, seed: int = 0,
-                 mode: str = "iid", reuse: float = 0.5, refresh: int = 8):
-        if mode not in ("iid", "nested"):
+                 mode: str = "iid", reuse: float = 0.5, refresh: int = 8,
+                 key=None):
+        if mode not in ("iid", "nested", "keyed"):
             raise ValueError(mode)
         self.x, self.batch, self.seed = np.asarray(x), batch, seed
         self.mode, self.reuse, self.refresh = mode, reuse, refresh
+        if mode == "keyed":
+            from repro.api import keys as api_keys
+            self._base_key = api_keys.as_key(seed if key is None else key)
+            self._cursor = None          # (next_step, carried key)
+
+    def _keyed_indices(self, step: int) -> np.ndarray:
+        from repro.api import keys as api_keys
+        from repro.core.minibatch import sample_batch
+
+        if self._cursor is None or step < self._cursor[0]:
+            self._cursor = (0, self._base_key)
+        s, key = self._cursor
+        kb = None
+        while s <= step:
+            key, kb = api_keys.next_batch_key(key)
+            s += 1
+        self._cursor = (s, key)
+        return np.asarray(sample_batch(kb, self.x.shape[0], self.batch))
 
     def batch_indices(self, step: int) -> np.ndarray:
         """The (b,) row indices of batch ``step`` — pure in (seed, step)."""
         n = self.x.shape[0]
+        if self.mode == "keyed":
+            return self._keyed_indices(step)
         if self.mode == "iid":
             rng = np.random.default_rng((self.seed, step))
             return rng.integers(0, n, self.batch)

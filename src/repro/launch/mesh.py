@@ -20,6 +20,15 @@ def make_host_mesh(model: int = 2):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def make_cluster_mesh(model: int = 1):
+    """Default data x model mesh for the sharded clustering plans: all
+    devices on the data axis unless a model split is requested.  Used by
+    ``repro.api`` when ``distribution='sharded'`` is asked for without an
+    explicit mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((max(n // model, 1), model), ("data", "model"))
+
+
 def make_restart_mesh(restarts: int, axis: str = "restart"):
     """1-axis mesh for the multi-restart clustering engine.
 

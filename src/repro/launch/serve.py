@@ -66,36 +66,39 @@ def serve_lm(args):
 
 
 def serve_cluster(args):
-    """Fit the multi-restart engine, then serve sharded batch assignment —
-    the clustering analogue of prefill+decode: one expensive fit, then
-    high-throughput predict over query shards."""
-    from repro.core import Gaussian, MBConfig, MultiRestartEngine
-    from repro.core.distributed import predict_distributed
+    """Fit best-of-R through the KernelKMeans estimator (the restart axis
+    device-sharded), then serve sharded batch assignment — the clustering
+    analogue of prefill+decode: one expensive fit, then high-throughput
+    predict over query shards."""
+    from repro.api import KernelKMeans, SolverConfig
     from repro.data import blobs
     from repro.launch.mesh import make_restart_mesh
 
     x, _ = blobs(n=args.n, d=args.d, k=args.k, seed=args.seed)
     x = jnp.asarray(x)
-    kern = Gaussian(kappa=jnp.float32(1.0))
-    cfg = MBConfig(k=args.k, batch_size=args.batch_size, tau=args.tau,
-                   max_iters=args.max_iters, epsilon=-1.0)
+    cfg = SolverConfig(k=args.k, batch_size=args.batch_size, tau=args.tau,
+                       max_iters=args.max_iters, epsilon=-1.0,
+                       kernel="rbf", kernel_params={"kappa": 1.0},
+                       cache="none", distribution="single",
+                       restarts=args.restarts)
     mesh = make_restart_mesh(args.restarts)
-    eng = MultiRestartEngine(kern, cfg, restarts=args.restarts, mesh=mesh)
+    est = KernelKMeans(cfg, mesh=mesh)
 
     t0 = time.time()
-    res = eng.fit(x, jax.random.PRNGKey(args.seed))
+    res = est.fit(x, key=args.seed).result_
     jax.block_until_ready(res.objectives)
     t_fit = time.time() - t0
-    print(f"cluster fit: R={args.restarts} on {mesh.devices.size} device(s) "
+    print(f"cluster fit [{est.plan_.name}]: R={args.restarts} on "
+          f"{mesh.devices.size} device(s) "
           f"in {t_fit * 1e3:.1f} ms; best objective "
           f"{float(res.objective):.4f} (restart {int(res.best)}, "
           f"per-restart {[round(float(o), 4) for o in res.objectives]})")
 
     xq = jnp.tile(x, (-(-args.queries // args.n), 1))[:args.queries]
-    pred = predict_distributed(res.state, x, xq, kern, mesh)  # warm compile
+    pred = est.predict(xq)                     # warm compile
     pred.block_until_ready()
     t0 = time.time()
-    pred = predict_distributed(res.state, x, xq, kern, mesh)
+    pred = est.predict(xq)
     pred.block_until_ready()
     t_pred = time.time() - t0
     print(f"serve: {xq.shape[0]} queries in {t_pred * 1e3:.1f} ms "
@@ -114,33 +117,31 @@ def serve_cluster_cached(args):
 
     ``--cache-mode precomputed`` swaps the LRU for the full-Gram fast path
     (PrecomputedGram) — the right call when n^2 fits on device."""
-    from repro.cache import as_kernel, precompute_gram, predict_cached, stats
-    from repro.core import Gaussian, MBConfig, predict
-    from repro.core.minibatch import fit_cached
+    from repro.api import KernelKMeans, SolverConfig
+    from repro.cache import predict_cached, stats
     from repro.data import blobs
 
     x, _ = blobs(n=args.n, d=args.d, k=args.k, seed=args.seed)
     x = jnp.asarray(x)
-    kern = Gaussian(kappa=jnp.float32(1.0))
-    cfg = MBConfig(k=args.k, batch_size=args.batch_size, tau=args.tau,
-                   max_iters=args.max_iters, epsilon=-1.0)
+    cfg = SolverConfig(k=args.k, batch_size=args.batch_size, tau=args.tau,
+                       max_iters=args.max_iters, epsilon=-1.0,
+                       kernel="rbf", kernel_params={"kappa": 1.0},
+                       distribution="single", jit=False,
+                       cache_tile=args.cache_tile,
+                       cache_capacity=args.cache_capacity)
 
     if args.cache_mode == "precomputed":
+        est = KernelKMeans(cfg.replace(cache="precomputed"))
         t0 = time.time()
-        pk, xi = as_kernel(precompute_gram(kern, x))
-        jax.block_until_ready(pk.gram)
-        print(f"precomputed Gram: n={args.n} in "
-              f"{(time.time() - t0) * 1e3:.1f} ms "
-              f"({args.n * args.n} kernel evals, once)")
-        from repro.core import fit
+        est.fit(x, key=args.seed)
+        hist = est.history_
+        print(f"precomputed-Gram fit [{est.plan_.name}]: {len(hist)} iters "
+              f"in {(time.time() - t0) * 1e3:.1f} ms "
+              f"({args.n * args.n} kernel evals once, 0 per iteration)")
+        xq = jnp.tile(x, (-(-args.queries // args.n), 1))[:args.queries]
+        est.predict(xq).block_until_ready()       # warm compile
         t0 = time.time()
-        state, hist = fit(xi, pk, cfg, jax.random.PRNGKey(args.seed),
-                          early_stop=False)
-        print(f"fullbatch-Gram fit: {len(hist)} iters in "
-              f"{(time.time() - t0) * 1e3:.1f} ms (0 further kernel evals)")
-        xq = jnp.tile(xi, (-(-args.queries // args.n), 1))[:args.queries]
-        t0 = time.time()
-        pred = predict(state, xi, xq, pk, chunk=4096)
+        pred = est.predict(xq)
         pred.block_until_ready()
         t_pred = time.time() - t0
         print(f"serve: {xq.shape[0]} queries in {t_pred * 1e3:.1f} ms "
@@ -148,15 +149,15 @@ def serve_cluster_cached(args):
         print("cluster sizes:", jnp.bincount(pred, length=args.k).tolist())
         return
 
+    est = KernelKMeans(cfg.replace(cache="lru", sampler="nested"))
     t0 = time.time()
-    state, hist, ck = fit_cached(
-        x, kern, cfg, jax.random.PRNGKey(args.seed),
-        tile=args.cache_tile, capacity=args.cache_capacity,
-        sampler="nested", early_stop=False)
-    jax.block_until_ready(state.sqnorm)
+    est.fit(x, key=args.seed)
+    jax.block_until_ready(est.state_.sqnorm)
     t_fit = time.time() - t0
+    state, ck, hist = est.state_, est.cache_, est.history_
     s = stats(ck.cache)
-    print(f"cached fit: {len(hist)} iters in {t_fit * 1e3:.1f} ms — "
+    print(f"cached fit [{est.plan_.name}]: {len(hist)} iters in "
+          f"{t_fit * 1e3:.1f} ms — "
           f"hits {s['hits']} misses {s['misses']} "
           f"evictions {s['evictions']} "
           f"(hit rate {s['hit_rate']:.2%}, {s['evals']} kernel evals)")

@@ -1,0 +1,410 @@
+"""The unified estimator surface: KernelKMeans + SolverConfig + plan layer.
+
+Grid equivalence against the legacy twins lives in test_api_grid.py; here:
+config validation, the kernel name registry, unified key derivation,
+save/load round-trip, partial_fit resumption, the solver registry, the
+public-API lock, and the deprecation-warning contract of the shims.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api
+from repro.api import (
+    KernelKMeans, SolverConfig, list_kernels, list_solvers, make_kernel,
+    register_solver, resolve_plan, unregister_solver,
+)
+from repro.api import keys as api_keys
+from repro.core.kernel_fns import Gaussian, register_kernel_factory
+from repro.data import blobs
+
+GAUSS = Gaussian(kappa=jnp.float32(1.5))
+
+
+def _blobs(n=256, d=8, k=4, seed=0):
+    x, _ = blobs(n=n, d=d, k=k, seed=seed)
+    return jnp.asarray(x)
+
+
+def _cfg(**kw):
+    base = dict(k=4, batch_size=32, tau=16, max_iters=6, epsilon=-1.0,
+                kernel=GAUSS, cache="none", distribution="single",
+                jit=False)
+    base.update(kw)
+    return SolverConfig(**base)
+
+
+# ------------------------------------------------------------ SolverConfig
+def test_config_validates_axes():
+    for bad in (dict(cache="lfu"), dict(distribution="multihost"),
+                dict(sampler="poisson"), dict(restarts=0),
+                dict(init="farthest")):
+        with pytest.raises(ValueError):
+            _cfg(**bad)
+
+
+def test_config_auto_resolution():
+    c = SolverConfig(kernel="rbf")                  # cache/distribution auto
+    r = c.resolve(n=512, mesh=None)
+    assert r.distribution == "single"
+    assert r.cache == "precomputed"                 # n^2 small -> full Gram
+    r2 = c.resolve(n=1 << 20, mesh=None)
+    assert r2.cache == "none"
+    r3 = c.replace(sampler="nested").resolve(n=1 << 20)
+    assert r3.cache == "lru"
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+    assert c.resolve(n=512, mesh=mesh).distribution == "sharded"
+    # precomputed kernels never get another cache layer on top
+    from repro.core.kernel_fns import Precomputed
+    pk = Precomputed(gram=jnp.eye(8))
+    assert SolverConfig(kernel=pk).resolve(n=8).cache == "none"
+
+
+# ------------------------------------------------------- kernel registry
+def test_kernel_registry_names_and_resolution():
+    names = list_kernels()
+    for expected in ("rbf", "gaussian", "laplacian", "polynomial",
+                     "linear", "precomputed"):
+        assert expected in names
+    k = make_kernel("rbf", kappa=2.0)
+    assert isinstance(k, Gaussian)
+    assert float(k.kappa) == 2.0
+    # instance passthrough
+    assert make_kernel(GAUSS) is GAUSS
+    with pytest.raises(ValueError, match="registered kernels"):
+        make_kernel("not-a-kernel")
+    with pytest.raises(ValueError, match="kernel_params"):
+        make_kernel(GAUSS, kappa=1.0)
+
+
+def test_kernel_registry_duplicate_name_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        register_kernel_factory("rbf", lambda: GAUSS)
+    # overwrite with itself round-trips cleanly
+    register_kernel_factory("test_dup_kernel", lambda: GAUSS)
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            register_kernel_factory("test_dup_kernel", lambda: GAUSS)
+        register_kernel_factory("test_dup_kernel", lambda: GAUSS,
+                                overwrite=True)
+    finally:
+        from repro.core.kernel_fns import _KERNEL_FACTORIES
+        _KERNEL_FACTORIES.pop("test_dup_kernel", None)
+
+
+def test_config_kernel_string_matches_instance():
+    x = _blobs()
+    key = jax.random.PRNGKey(3)
+    by_name = KernelKMeans(_cfg(kernel="rbf",
+                                kernel_params={"kappa": 1.5})).fit(x, key)
+    by_inst = KernelKMeans(_cfg(kernel=GAUSS)).fit(x, key)
+    np.testing.assert_array_equal(np.asarray(by_name.state_.sqnorm),
+                                  np.asarray(by_inst.state_.sqnorm))
+
+
+# ------------------------------------------------------------ key unification
+def test_same_seed_same_batches_across_single_restart_plans():
+    """The satellite fix: one seed -> one batch sequence for the whole
+    single-restart family.  Window contents (dataset row ids) are the
+    batch-sequence fingerprint; the cached plan computes identical indices
+    (tile-blocked Gram numerics differ only in float rounding)."""
+    x = _blobs()
+    key = jax.random.PRNGKey(11)
+    host = KernelKMeans(_cfg()).fit(x, key)
+    jit = KernelKMeans(_cfg(jit=True)).fit(x, key)
+    lru = KernelKMeans(_cfg(cache="lru", cache_tile=32,
+                            cache_capacity=8)).fit(x, key)
+    np.testing.assert_array_equal(np.asarray(host.state_.idx),
+                                  np.asarray(jit.state_.idx))
+    np.testing.assert_array_equal(np.asarray(host.state_.idx),
+                                  np.asarray(lru.state_.idx))
+    np.testing.assert_allclose(np.asarray(host.state_.sqnorm),
+                               np.asarray(jit.state_.sqnorm), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(host.state_.sqnorm),
+                               np.asarray(lru.state_.sqnorm), atol=1e-5)
+
+
+def test_key_helpers_document_the_derivation():
+    key = jax.random.PRNGKey(0)
+    ik, fk = api_keys.split_init(key)
+    np.testing.assert_array_equal(np.asarray(jax.random.split(key)[0]),
+                                  np.asarray(ik))
+    k1, kb1 = api_keys.next_batch_key(fk)
+    np.testing.assert_array_equal(np.asarray(jax.random.split(fk)[1]),
+                                  np.asarray(kb1))
+    # batch_key_at replays the sequential stream
+    k2, kb2 = api_keys.next_batch_key(k1)
+    np.testing.assert_array_equal(np.asarray(api_keys.batch_key_at(fk, 1)),
+                                  np.asarray(kb2))
+
+
+# ------------------------------------------------------------- estimator
+def test_estimator_transform_score_and_shapes():
+    x = _blobs()
+    est = KernelKMeans(_cfg()).fit(x, jax.random.PRNGKey(0))
+    d = est.transform(x[:17])
+    assert d.shape == (17, 4)
+    assert bool(jnp.all(d >= -1e-6))
+    labels = est.predict(x[:17])
+    np.testing.assert_array_equal(np.asarray(labels),
+                                  np.asarray(jnp.argmin(d, axis=1)))
+    s = est.score(x)
+    assert np.isfinite(s) and s <= 0
+
+
+def test_estimator_fit_predict_matches_legacy_predict():
+    from repro.core.minibatch import predict as legacy_predict
+
+    x = _blobs()
+    est = KernelKMeans(_cfg()).fit(x, jax.random.PRNGKey(1))
+    want = legacy_predict(est.state_, x, x[:50], GAUSS)
+    np.testing.assert_array_equal(np.asarray(est.predict(x[:50])),
+                                  np.asarray(want))
+
+
+def test_save_load_predict_roundtrip(tmp_path):
+    x = _blobs()
+    for cfg in (_cfg(), _cfg(cache="lru", cache_tile=32, cache_capacity=8),
+                _cfg(cache="precomputed")):
+        est = KernelKMeans(cfg).fit(x, jax.random.PRNGKey(2))
+        p = str(tmp_path / f"centers_{cfg.cache}.npz")
+        est.save(p)
+        served = KernelKMeans.load(p)
+        np.testing.assert_array_equal(np.asarray(served.predict(x)),
+                                      np.asarray(est.predict(x)))
+        np.testing.assert_allclose(np.asarray(served.transform(x[:9])),
+                                   np.asarray(est.transform(x[:9])),
+                                   atol=1e-6)
+        assert served.config.k == cfg.k
+        # serving-only estimators refuse to resume
+        with pytest.raises(RuntimeError):
+            KernelKMeans.load(p)._outcome or (_ for _ in ()).throw(
+                RuntimeError("no outcome"))
+
+
+def test_partial_fit_matches_one_long_fit():
+    x = _blobs()
+    key = jax.random.PRNGKey(5)
+    for jit in (False, True):
+        long = KernelKMeans(_cfg(jit=jit, max_iters=12)).fit(x, key)
+        two = KernelKMeans(_cfg(jit=jit, max_iters=12))
+        two.partial_fit(x, key, iters=7)
+        two.partial_fit(x, iters=5)
+        np.testing.assert_array_equal(np.asarray(long.state_.idx),
+                                      np.asarray(two.state_.idx))
+        np.testing.assert_allclose(np.asarray(long.state_.sqnorm),
+                                   np.asarray(two.state_.sqnorm), atol=0)
+        if not jit:
+            assert len(two.history_) == 12
+            assert [h["step"] for h in two.history_] == list(range(12))
+
+
+def test_early_stop_false_honored_on_jit_plans():
+    """early_stop=False must defeat the epsilon condition even inside the
+    compiled while_loop (regression: it was silently ignored on every jit
+    path)."""
+    x = _blobs()
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+    for cfg, m in [
+            (_cfg(jit=True, epsilon=1e9, early_stop=False, max_iters=5),
+             None),
+            (_cfg(jit=True, epsilon=1e9, early_stop=False, max_iters=5,
+                  cache="precomputed"), None),
+            (_cfg(jit=True, epsilon=1e9, early_stop=False, max_iters=5,
+                  distribution="sharded"), mesh)]:
+        est = KernelKMeans(cfg, mesh=m).fit(x, jax.random.PRNGKey(0))
+        assert int(est.iters_) == 5, cfg.axes_repr()
+        est2 = KernelKMeans(cfg.replace(early_stop=True),
+                            mesh=m).fit(x, jax.random.PRNGKey(0))
+        assert int(est2.iters_) == 1, cfg.axes_repr()
+
+
+def test_nested_sampler_rejects_sample_weight():
+    x = _blobs()
+    est = KernelKMeans(_cfg(sampler="nested"))
+    with pytest.raises(NotImplementedError, match="sample weights"):
+        est.fit(x, jax.random.PRNGKey(0),
+                sample_weight=jnp.ones(x.shape[0]))
+
+
+def test_refit_same_shape_different_data_is_fresh():
+    """Executors cache compiled programs across fits — refitting the SAME
+    estimator on different data of the same shape must equal a fresh
+    estimator's fit (regression: the sharded-lru run cache baked the first
+    dataset's coordinates in as jit constants)."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+    x1, x2 = _blobs(seed=0), _blobs(seed=1)
+    key = jax.random.PRNGKey(4)
+    for cfg, m in [
+            (_cfg(jit=True), None),
+            (_cfg(cache="precomputed", jit=True), None),
+            (_cfg(cache="lru", cache_tile=32, cache_capacity=8), None),
+            (_cfg(distribution="sharded", jit=True), mesh),
+            (_cfg(distribution="sharded", cache="lru", jit=True,
+                  cache_tile=32, cache_capacity=16), mesh)]:
+        reused = KernelKMeans(cfg, mesh=m)
+        reused.fit(x1, key)
+        reused.fit(x2, key)
+        fresh = KernelKMeans(cfg, mesh=m).fit(x2, key)
+        np.testing.assert_array_equal(
+            np.asarray(reused.state_.sqnorm),
+            np.asarray(fresh.state_.sqnorm),
+            err_msg=cfg.axes_repr())
+
+
+def test_partial_fit_unsupported_plans_raise():
+    x = _blobs()
+    est = KernelKMeans(_cfg(restarts=2))
+    with pytest.raises(NotImplementedError, match="partial_fit"):
+        est.partial_fit(x)
+
+
+# ------------------------------------------------------------ solver registry
+def test_unmatched_config_names_register_solver():
+    x = _blobs()
+    # restarts > 1 on the sharded path: the roadmap's fused program — not
+    # implemented, must point at the registry
+    cfg = _cfg(restarts=2, distribution="sharded")
+    with pytest.raises(NotImplementedError, match="register_solver"):
+        KernelKMeans(cfg).fit(x, jax.random.PRNGKey(0))
+
+
+def test_register_solver_claims_a_config_point():
+    calls = {}
+
+    class DummyExecutor:
+        supports_partial_fit = False
+
+        def __init__(self, config, mesh):
+            calls["built"] = config
+
+        def fit(self, x, key, **kw):
+            from repro.api.executors import FitOutcome
+            calls["fit"] = True
+            st = KernelKMeans(_cfg()).fit(x, key).state_
+            return FitOutcome(state=st, iters=0)
+
+        def serving_tuple(self, outcome, x):
+            return GAUSS, x[:1], outcome.state.coef, outcome.state.sqnorm
+
+        def predict(self, outcome, x, xq, chunk=4096):
+            return jnp.zeros(xq.shape[0], jnp.int32)
+
+    register_solver(
+        "test_fused",
+        matches=lambda c: c.restarts > 1 and c.distribution == "sharded",
+        build=DummyExecutor)
+    try:
+        assert "test_fused" in list_solvers()
+        with pytest.raises(ValueError, match="already registered"):
+            register_solver("test_fused", matches=lambda c: False,
+                            build=DummyExecutor)
+        x = _blobs()
+        est = KernelKMeans(_cfg(restarts=2, distribution="sharded"))
+        est.fit(x, jax.random.PRNGKey(0))
+        assert est.plan_.name == "test_fused"
+        assert calls["fit"]
+    finally:
+        unregister_solver("test_fused")
+    with pytest.raises(ValueError, match="not registered"):
+        unregister_solver("test_fused")
+    cfg = _cfg(restarts=2, distribution="sharded")
+    with pytest.raises(NotImplementedError):
+        resolve_plan(cfg, n=256)
+
+
+# --------------------------------------------------------------- API lock
+EXPECTED_API = [
+    "FitOutcome", "KernelKMeans", "Plan", "SolverConfig", "SolverSpec",
+    "keys", "list_kernels", "list_solvers", "make_kernel",
+    "register_kernel_factory", "register_solver", "resolve_plan",
+    "unregister_solver",
+]
+
+EXPECTED_CONFIG_FIELDS = [
+    "k", "batch_size", "tau", "rate", "sqnorm_mode", "eval_mode",
+    "epsilon", "max_iters", "use_pallas", "compute_dtype", "kernel",
+    "kernel_params", "init", "early_stop", "cache", "distribution",
+    "restarts", "sampler", "jit", "cache_tile", "cache_capacity",
+    "cache_dtype", "reuse", "refresh", "data_axes", "model_axis",
+    "restart_axis", "eval_batch_size", "share_eval_gram",
+]
+
+
+def test_public_api_lock():
+    """Snapshot of the public surface: repro.api.__all__ and the
+    SolverConfig schema.  Additions/removals/reorders are API changes —
+    update this test deliberately, with docs/api.md."""
+    assert sorted(repro.api.__all__) == EXPECTED_API
+    assert [f.name for f in dataclasses.fields(SolverConfig)] == \
+        EXPECTED_CONFIG_FIELDS
+    # every exported name resolves
+    for name in repro.api.__all__:
+        assert getattr(repro.api, name) is not None
+
+
+# ------------------------------------------------------------- deprecation
+def test_legacy_shims_warn_exactly_once():
+    from repro.api import deprecation
+    from repro.core import fit
+
+    x = _blobs(n=128, k=2)
+    cfg_mb = KernelKMeans(_cfg(k=2, batch_size=16, tau=8,
+                               max_iters=2)).config.mb_config()
+    deprecation.reset_warnings()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        fit(x, GAUSS, cfg_mb, jax.random.PRNGKey(0), early_stop=False)
+        fit(x, GAUSS, cfg_mb, jax.random.PRNGKey(1), early_stop=False)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+           and "repro.core.fit is deprecated" in str(w.message)]
+    assert len(dep) == 1, [str(w.message) for w in rec]
+    assert "KernelKMeans" in str(dep[0].message)
+    deprecation.reset_warnings()
+
+
+def test_all_shims_carry_migration_pointer():
+    """Each legacy entry point warns once, naming its SolverConfig twin."""
+    from repro.api import deprecation
+    from repro.core import engine, minibatch
+    from repro.core import distributed as dist
+
+    x = _blobs(n=128, k=2)
+    mb = KernelKMeans(_cfg(k=2, batch_size=16, tau=8,
+                           max_iters=2)).config.mb_config()
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+    init_idx = jnp.array([0, 50], jnp.int32)
+    shim_calls = [
+        ("repro.core.fit", lambda: minibatch.fit(
+            x, GAUSS, mb, jax.random.PRNGKey(0), early_stop=False)),
+        ("repro.core.fit_jit", lambda: minibatch.fit_jit(
+            x, GAUSS, mb, jax.random.PRNGKey(0), init_idx)),
+        ("repro.core.fit_cached", lambda: minibatch.fit_cached(
+            x, GAUSS, mb, jax.random.PRNGKey(0), tile=32, capacity=4,
+            early_stop=False)),
+        ("repro.core.fit_restarts", lambda: engine.fit_restarts(
+            x, GAUSS, mb, jax.random.PRNGKey(0), restarts=2)),
+        ("repro.core.distributed.fit_distributed_jit",
+         lambda: dist.fit_distributed_jit(
+             x, x[init_idx], GAUSS, mb, mesh, jax.random.PRNGKey(0))),
+    ]
+    deprecation.reset_warnings()
+    try:
+        for name, call in shim_calls:
+            with warnings.catch_warnings(record=True) as rec:
+                warnings.simplefilter("always")
+                call()
+            dep = [w for w in rec
+                   if issubclass(w.category, DeprecationWarning)
+                   and name + " is deprecated" in str(w.message)]
+            assert len(dep) == 1, (name, [str(w.message) for w in rec])
+    finally:
+        deprecation.reset_warnings()
