@@ -158,6 +158,11 @@ class SolverConfig:
                 changes["cache"] = "lru"
             else:
                 changes["cache"] = "none"
+        if self.restart_axis is None and self.restarts > 1 and \
+                changes.get("distribution", self.distribution) == "sharded":
+            # the fused restart x data x model plan needs a named restart
+            # mesh axis; pin the canonical name (make_fused_mesh's default)
+            changes["restart_axis"] = "restart"
         return self.replace(**changes) if changes else self
 
     def axes_repr(self) -> str:

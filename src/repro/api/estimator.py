@@ -26,8 +26,11 @@ import numpy as np
 
 from repro.api import keys as api_keys
 from repro.api.config import SolverConfig, field_names
-from repro.api.executors import _assign, _distances
+from repro.api.executors import (
+    _assign, _distances, carry_of, outcome_from_carry, FitCarry,
+)
 from repro.core.kernel_fns import kernel_spec, make_kernel
+from repro.core.state import CenterState
 
 # SolverConfig fields that are JSON-serializable as-is (everything except
 # the kernel spec, which save() lowers to (name, params)).
@@ -58,6 +61,7 @@ class KernelKMeans:
         self.mesh = mesh
         self.plan_ = None
         self._plan_sig = None
+        self._carry_solver = None  # plan name a load()ed carry came from
         self._outcome = None
         self._x = None
         self._serving = None      # (kernel, sup, coef, sqnorm) after load()
@@ -116,7 +120,23 @@ class KernelKMeans:
                                     max_iters=iters)
             self._set_fitted(X, out)
             return self
-        plan = self.plan_
+        # A load()ed estimator carries a resumable outcome but no plan
+        # yet.  Resume on the SAVED plan, not whatever ``auto`` axes would
+        # resolve to for the resume dataset's size — otherwise e.g. a
+        # cache='auto' fit on large data (plan 'single') resumed on small
+        # data would re-resolve to 'single_precomputed' and refuse.
+        if self.plan_ is None and self._carry_solver is not None:
+            from repro.api.plan import resolve_plan
+
+            self.plan_ = resolve_plan(self.config, n=X.shape[0],
+                                      mesh=self.mesh,
+                                      solver=self._carry_solver)
+            # a sentinel signature no plan_for() resolution can equal: a
+            # later full fit() must re-resolve through the registry
+            # instead of inheriting the carry-forced executor
+            self._plan_sig = ("carry", self._carry_solver)
+        plan = self.plan_ if self.plan_ is not None \
+            else self.plan_for(X.shape[0])
         if not plan.executor.supports_partial_fit:
             raise NotImplementedError(
                 f"plan {plan.name!r} does not support partial_fit")
@@ -175,28 +195,61 @@ class KernelKMeans:
         plan whose kernel has a registry spec (``kernel_spec``) — cached /
         precomputed / sharded states are lowered to base-kernel support
         coordinates first, so a served prediction needs no cache, Gram or
-        mesh."""
+        mesh.
+
+        Plans that support ``partial_fit`` additionally round-trip their
+        full :class:`repro.api.executors.FitCarry` — the center state,
+        the carried PRNG fit key and the step cursor — so
+        ``fit(a); save; load; partial_fit(b)`` draws exactly the batches
+        ``fit(a); partial_fit(b)`` would have drawn (bit-identical
+        states)."""
         kern, sup, coef, sqnorm = self._serving_tuple()
         name, params = kernel_spec(kern)
         meta = {"kernel": name, "kernel_params": params,
                 "config": {f: getattr(self.config, f)
                            for f in _JSON_FIELDS}}
+        arrays = dict(sup=np.asarray(sup), coef=np.asarray(coef),
+                      sqnorm=np.asarray(sqnorm))
+        # resumable iff the plan supports partial_fit; an estimator that
+        # was itself load()ed (no plan yet) only holds an outcome when its
+        # saved carry was resumable, so it keeps round-tripping
+        resumable = (self.plan_.executor.supports_partial_fit
+                     if self.plan_ is not None else self._x is None)
+        carry = carry_of(self._outcome) if resumable else None
+        if carry is not None and isinstance(carry.state, CenterState):
+            for f, v in zip(carry.state._fields, carry.state):
+                arrays[f"carry_{f}"] = np.asarray(v)
+            arrays["carry_key"] = np.asarray(carry.key)
+            meta["carry"] = {"steps": carry.steps, "iters": carry.iters,
+                             "solver": (self.plan_.name
+                                        if self.plan_ is not None
+                                        else self._carry_solver)}
         with open(path, "wb") as f:
-            np.savez(f, sup=np.asarray(sup), coef=np.asarray(coef),
-                     sqnorm=np.asarray(sqnorm),
-                     meta=np.frombuffer(
-                         json.dumps(meta).encode(), dtype=np.uint8))
+            np.savez(f, meta=np.frombuffer(
+                json.dumps(meta).encode(), dtype=np.uint8), **arrays)
         return path
 
     @classmethod
     def load(cls, path: str) -> "KernelKMeans":
-        """Rebuild a serving-only estimator (``predict`` / ``transform`` /
-        ``score``; call ``fit`` to train anew)."""
+        """Rebuild a serving estimator (``predict`` / ``transform`` /
+        ``score``).  When the file carries a :class:`FitCarry` (saved by a
+        ``partial_fit``-capable plan), the estimator is also RESUMABLE:
+        ``partial_fit(X)`` continues the batch-key stream exactly where
+        the saved fit stopped."""
         with np.load(path) as data:
             meta = json.loads(bytes(data["meta"]).decode())
             sup = jnp.asarray(data["sup"])
             coef = jnp.asarray(data["coef"])
             sqnorm = jnp.asarray(data["sqnorm"])
+            carry = None
+            if "carry_key" in data:
+                state = CenterState(*(jnp.asarray(data[f"carry_{f}"])
+                                      for f in CenterState._fields))
+                cmeta = meta["carry"]
+                carry = FitCarry(state=state,
+                                 key=jnp.asarray(data["carry_key"]),
+                                 steps=cmeta["steps"],
+                                 iters=cmeta["iters"])
         cfg_dict = dict(meta["config"])
         cfg_dict["kernel"] = meta["kernel"]
         cfg_dict["kernel_params"] = meta["kernel_params"]
@@ -204,4 +257,9 @@ class KernelKMeans:
         est._serving = (make_kernel(meta["kernel"],
                                     **meta["kernel_params"]),
                         sup, coef, sqnorm)
+        if carry is not None:
+            est._outcome = outcome_from_carry(carry)
+            est._carry_solver = meta["carry"].get("solver")
+            est.state_ = est._outcome.state
+            est.iters_ = est._outcome.iters
         return est

@@ -17,7 +17,7 @@ overhead (see ``benchmarks/run.py api_overhead``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional
+from typing import Any, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +51,34 @@ class FitOutcome:
     caches: Any = None                      # stacked per-shard tile caches
     engine: Any = None                      # EngineResult (multi-restart)
     x_view: Any = None                      # index-data view (lru/precomp)
+
+
+class FitCarry(NamedTuple):
+    """The resumable part of a fit — everything ``partial_fit`` needs to
+    continue the batch stream bit-exactly, and therefore everything
+    ``KernelKMeans.save`` must round-trip: the full center state, the
+    carried PRNG fit key, the completed-step cursor (the nested sampler's
+    schedule position), and the iteration count."""
+
+    state: Any                    # CenterState (single-device plans)
+    key: jax.Array                # carried fit-stream key
+    steps: Optional[int]          # host-loop cursor; None on jit-only fits
+    iters: int
+
+
+def carry_of(outcome: FitOutcome) -> Optional[FitCarry]:
+    """The serializable resume carry of an outcome, or None when the plan
+    that produced it cannot resume (no carried key)."""
+    if outcome is None or outcome.key is None:
+        return None
+    return FitCarry(state=outcome.state, key=outcome.key,
+                    steps=outcome.steps, iters=int(outcome.iters))
+
+
+def outcome_from_carry(carry: FitCarry) -> FitOutcome:
+    """Rehydrate a deserialized carry into a resumable outcome."""
+    return FitOutcome(state=carry.state, iters=carry.iters, key=carry.key,
+                      steps=carry.steps)
 
 
 def _loop_mb(mb, early_stop: bool, max_iters=None):
@@ -118,6 +146,35 @@ class Executor:
     def distances(self, outcome: FitOutcome, x, xq, chunk: int = 4096):
         kern, sup, coef, sqnorm = self.serving_tuple(outcome, x)
         return _distances(kern, coef, sqnorm, sup, xq, chunk)
+
+
+def _sharded_batch_setup(executor: "Executor"):
+    """Shared data-shard setup for every sharded-family executor: count
+    the data shards and round the batch size UP to the next multiple
+    (non-divisible batch sizes were a hard error on the legacy surface).
+    Sets ``_shards``, ``effective_batch_size`` and ``_mb_eff``."""
+    from repro.core.distributed import _data_shard_count
+
+    executor._shards = _data_shard_count(executor.mesh,
+                                         executor.config.data_axes)
+    b = executor.mb.batch_size
+    executor.effective_batch_size = -(-b // executor._shards) * \
+        executor._shards
+    executor._mb_eff = executor.mb._replace(
+        batch_size=executor.effective_batch_size)
+
+
+def _x_keyed_run(runs: dict, key, x_real, build):
+    """Compile-cache lookup for programs that CLOSE OVER a dataset
+    (``x_real``): the entry is valid only for that exact array object,
+    never merely for its shape — refitting on new same-shaped data must
+    rebuild (regression: stale coordinates baked in as jit constants)."""
+    entry = runs.get(key)
+    if entry is not None and entry[0] is x_real:
+        return entry[1]
+    run = build()
+    runs[key] = (x_real, run)
+    return run
 
 
 # ---------------------------------------------------------------- single
@@ -415,11 +472,7 @@ class ShardedExecutor(Executor):
             from repro.launch.mesh import make_cluster_mesh
             mesh = make_cluster_mesh()
         super().__init__(config, mesh)
-        from repro.core.distributed import _data_shard_count
-        self._shards = _data_shard_count(mesh, config.data_axes)
-        b = self.mb.batch_size
-        self.effective_batch_size = -(-b // self._shards) * self._shards
-        self._mb_eff = self.mb._replace(batch_size=self.effective_batch_size)
+        _sharded_batch_setup(self)
         self._runs = {}
 
     def _mb_for(self, strict: bool):
@@ -537,35 +590,31 @@ class ShardedCachedExecutor(ShardedExecutor):
     name = "sharded_lru"
 
     def _get_cached_run(self, x_real, n_valid, strict: bool):
-        # the step builder CLOSES OVER x_real (real coordinates, evaluated
-        # on cache misses), baking its values into the compiled program —
-        # so the cache entry is valid only for that exact array object,
-        # never merely for its shape
-        key = ("cached", n_valid, strict)
-        entry = self._runs.get(key)
-        if entry is not None and entry[0] is x_real:
-            return entry[1]
-        from repro.core.distributed import make_cached_dist_sampling_step
+        def build():
+            from repro.core.distributed import (
+                make_cached_dist_sampling_step)
 
-        mb = self._mb_for(strict)
-        loop_mb = _loop_mb(mb, self.config.early_stop)
-        step = make_cached_dist_sampling_step(
-            self.kernel, x_real, mb, self.mesh, self.config.data_axes,
-            self.config.model_axis, n_valid=n_valid)
+            mb = self._mb_for(strict)
+            loop_mb = _loop_mb(mb, self.config.early_stop)
+            step = make_cached_dist_sampling_step(
+                self.kernel, x_real, mb, self.mesh, self.config.data_axes,
+                self.config.model_axis, n_valid=n_valid)
 
-        @jax.jit
-        def run(state, caches, x_idx, key):
-            def step_with_key(carry, kb):
-                st, cc = carry
-                st, cc, info = step(st, cc, x_idx, kb)
-                return (st, cc), info.improvement
+            @jax.jit
+            def run(state, caches, x_idx, key):
+                def step_with_key(carry, kb):
+                    st, cc = carry
+                    st, cc, info = step(st, cc, x_idx, kb)
+                    return (st, cc), info.improvement
 
-            (state, caches), iters = run_early_stopped(
-                loop_mb, step_with_key, (state, caches), key)
-            return state, caches, iters
+                (state, caches), iters = run_early_stopped(
+                    loop_mb, step_with_key, (state, caches), key)
+                return state, caches, iters
 
-        self._runs[key] = (x_real, run)
-        return run
+            return run
+
+        return _x_keyed_run(self._runs, ("cached", n_valid, strict),
+                            x_real, build)
 
     def fit(self, x, key, init_idx=None, center_pts=None,
             sample_weight=None, always_split: bool = True,
@@ -678,3 +727,169 @@ class RestartExecutor(Executor):
         from repro.core.distributed import predict_distributed
         return predict_distributed(outcome.state, x, xq, self.kernel,
                                    self.mesh, chunk=chunk)
+
+
+# ---------------------------------------------- fused restart x data x model
+class FusedRestartExecutor(Executor):
+    """restarts=R>1, distribution='sharded', jit — the ROADMAP's fused
+    restart x data x model program, the first solver to land purely
+    through the registry: R early-stopped SHARDED fits (each one the
+    ``sharded`` plan's exact trajectory for its per-restart key) run as
+    ONE compiled shard_map program on a ("restart", "data", "model") mesh
+    (``launch.mesh.make_fused_mesh``), with shared-eval-batch winner
+    selection running sharded and, for ``cache='lru'``, per-(restart,
+    data-shard) Gram tile caches riding the while_loop carry
+    (``init_shard_caches(..., restarts=R)``)."""
+
+    name = "fused_restart_sharded"
+
+    def __init__(self, config: SolverConfig, mesh=None):
+        if mesh is None:
+            from repro.launch.mesh import make_fused_mesh
+            mesh = make_fused_mesh(config.restarts)
+        super().__init__(config, mesh)
+        self.restart_axis = config.restart_axis or "restart"
+        if self.restart_axis not in mesh.axis_names:
+            raise ValueError(
+                f"mesh axes {mesh.axis_names} carry no "
+                f"{self.restart_axis!r} axis; build a fused mesh with "
+                "repro.launch.mesh.make_fused_mesh(restarts)")
+        _sharded_batch_setup(self)
+        self._runs = {}
+        self._init_run = None
+
+    def _eval_size(self, n: int) -> int:
+        eb = self.config.eval_batch_size \
+            or min(4 * self._mb_eff.batch_size, n)
+        return -(-eb // self._shards) * self._shards
+
+    def _keys_and_init(self, x, key, init_idx):
+        cfg, restarts = self.config, self.config.restarts
+        k_init, k_fit, k_eval = api_keys.restart_keys(key)
+        if init_idx is None:
+            if self._init_run is None:
+                from repro.core.engine import make_init_run
+                self._init_run = make_init_run(self.kernel, self._mb_eff,
+                                               cfg.init)
+            init_idx = self._init_run(api_keys.per_restart(k_init, restarts),
+                                      x)
+        if init_idx.shape[0] != restarts:
+            raise ValueError(f"init_idx has {init_idx.shape[0]} rows, "
+                             f"expected {restarts}")
+        return init_idx, api_keys.per_restart(k_fit, restarts), k_eval
+
+    def _get_run(self, n_valid, eval_size, x_real=None):
+        def build():
+            from repro.core.engine import make_fused_restart_run
+
+            cfg = self.config
+            return make_fused_restart_run(
+                self.kernel, _loop_mb(self._mb_eff, cfg.early_stop),
+                self.mesh, cfg.restarts, data_axes=cfg.data_axes,
+                model_axis=cfg.model_axis, restart_axis=self.restart_axis,
+                n_valid=n_valid, eval_size=eval_size, x_real=x_real)
+
+        return _x_keyed_run(self._runs,
+                            (n_valid, eval_size, x_real is not None),
+                            x_real, build)
+
+    def fit(self, x, key, init_idx=None, center_pts=None,
+            sample_weight=None, always_split: bool = True,
+            pad_fill: float = 0.0, **kw) -> FitOutcome:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.core.distributed import init_dist_state, pad_for_mesh
+        from repro.core.minibatch import sample_batch
+        from repro.launch.sharding import (
+            fused_state_placements, restart_placements)
+
+        cfg = self.config
+        if not cfg.jit:
+            raise NotImplementedError(
+                "the fused restart plan is jit-only (R restarts x data x "
+                "model in one compiled program); set jit=True, or "
+                "distribution='single' for a host-driven restart loop")
+        if sample_weight is not None:
+            raise NotImplementedError("sharded plans do not take sample "
+                                      "weights (use distribution='single')")
+        if center_pts is not None:
+            raise NotImplementedError("the fused restart plan draws R "
+                                      "independent inits; pass init_idx "
+                                      "of shape (R, k) instead of "
+                                      "center_pts")
+        init_idx, fit_keys, k_eval = self._keys_and_init(x, key, init_idx)
+        n = x.shape[0]
+        eval_size = self._eval_size(n)
+        eval_idx = sample_batch(k_eval, n, eval_size)   # real rows only
+        w = window_size(self._mb_eff.batch_size, self._mb_eff.tau)
+        xspec = NamedSharding(self.mesh, P(tuple(cfg.data_axes), None))
+
+        if cfg.cache == "lru":
+            return self._fit_cached(x, init_idx, fit_keys, eval_idx,
+                                    eval_size, w, xspec, pad_fill)
+
+        x_p, nv = pad_for_mesh(x, self.mesh, cfg.data_axes, fill=pad_fill)
+        n_valid = None if x_p is x else nv
+        state0 = jax.device_put(
+            jax.vmap(lambda cp: init_dist_state(cp, self.kernel, w))(
+                x[init_idx]),
+            fused_state_placements(self.mesh, self.restart_axis,
+                                   cfg.model_axis))
+        (fit_keys,), _ = restart_placements(self.mesh, self.restart_axis,
+                                            (fit_keys,))
+        run = self._get_run(n_valid, eval_size)
+        res = run(state0, jax.device_put(x_p, xspec),
+                  jax.device_put(x[eval_idx], xspec), fit_keys)
+        return FitOutcome(state=res.state, iters=res.iters, engine=res)
+
+    def _fit_cached(self, x, init_idx, fit_keys, eval_idx, eval_size, w,
+                    xspec, pad_fill):
+        from repro.cache.cached_kernel import make_cached
+        from repro.core.distributed import (
+            init_dist_state, init_shard_caches, pad_for_mesh)
+        from repro.launch.sharding import (
+            fused_state_placements, restart_placements)
+
+        cfg = self.config
+        cache_dtype = jnp.dtype(cfg.cache_dtype)
+        n = x.shape[0]
+        x_cache, nv = pad_for_mesh(x, self.mesh, cfg.data_axes,
+                                   fill=pad_fill, multiple=cfg.cache_tile)
+        n_valid = None if x_cache is x else nv
+        ck0, xi_full = make_cached(self.kernel, x_cache,
+                                   tile=cfg.cache_tile,
+                                   capacity=cfg.cache_capacity,
+                                   dtype=cache_dtype)
+        xi = xi_full[:n]
+        state0 = jax.device_put(
+            jax.vmap(lambda cp: init_dist_state(cp, ck0, w))(xi[init_idx]),
+            fused_state_placements(self.mesh, self.restart_axis,
+                                   cfg.model_axis))
+        (fit_keys,), _ = restart_placements(self.mesh, self.restart_axis,
+                                            (fit_keys,))
+        caches0 = init_shard_caches(
+            self.mesh, x_cache.shape[0], cfg.cache_tile, cfg.cache_capacity,
+            cfg.data_axes, cache_dtype, restarts=cfg.restarts,
+            restart_axis=self.restart_axis)
+        run = self._get_run(n_valid, eval_size, x_real=x_cache)
+        res, caches = run(state0, caches0, jax.device_put(xi_full, xspec),
+                          jax.device_put(x[eval_idx], xspec), fit_keys)
+        return FitOutcome(state=res.state, iters=res.iters, engine=res,
+                          caches=caches, x_view=xi)
+
+    def serving_tuple(self, outcome: FitOutcome, x):
+        state = outcome.state                 # DistState, model-sharded
+        k, w, d = state.pts.shape
+        if self.config.cache == "lru":        # index windows
+            ids = state.pts[..., 0].reshape(-1).astype(jnp.int32)
+            return self.kernel, x[ids], state.coef, state.sqnorm
+        return (self.kernel, state.pts.reshape(k * w, d), state.coef,
+                state.sqnorm)
+
+    def predict(self, outcome: FitOutcome, x, xq, chunk: int = 4096):
+        from repro.core.distributed import (
+            dist_to_center_state, predict_distributed)
+
+        kern, sup, coef, sqnorm = self.serving_tuple(outcome, x)
+        return predict_distributed(dist_to_center_state(outcome.state),
+                                   sup, xq, kern, self.mesh, chunk=chunk)

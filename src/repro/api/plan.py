@@ -152,3 +152,15 @@ register_solver(
     build=_ex.RestartExecutor,
     description="best-of-R restarts in one compiled program; legacy "
                 "fit_restarts / MultiRestartEngine")
+
+register_solver(
+    "fused_restart_sharded",
+    matches=lambda c: (c.restarts > 1 and c.distribution == "sharded"
+                       and c.jit and c.cache in ("none", "lru")),
+    build=_ex.FusedRestartExecutor,
+    description="R restarts of the SHARDED step as one compiled program "
+                "on a restart x data x model mesh (launch.mesh."
+                "make_fused_mesh); sharded shared-eval-batch winner "
+                "selection; cache='lru' adds per-(restart, data-shard) "
+                "Gram tile caches — the first registry-only solver (no "
+                "legacy fit_* twin)")

@@ -114,21 +114,16 @@ def pad_for_mesh(x: jax.Array, mesh: Mesh,
     ``n_valid`` to :func:`make_dist_sampling_step` /
     :func:`make_cached_dist_sampling_step` so the shard-local samplers mask
     pad rows out — the fill value then never reaches a batch, a window or
-    a Gram evaluation (tested for fill-independence).  Pad rows all land on
-    the LAST data shard, which therefore needs at least one real row:
-    ``n > (S - 1) * ceil(n_padded / S)`` — violated only when n is tiny
-    relative to the shard count, which raises here."""
+    a Gram evaluation (tested for fill-independence).  Pad rows land on the
+    trailing data shards; a shard that ends up ALL padding (tiny n relative
+    to the shard count, or a large ``multiple``) is zero-weighted out of
+    every sampled batch by the step builders, so even then no synthetic
+    point is ever trained on."""
     n = x.shape[0]
     n_shards = _data_shard_count(mesh, data_axes)
     pad = (-n) % math.lcm(n_shards, multiple)
     if pad == 0:
         return x, n
-    per = (n + pad) // n_shards
-    if n <= (n_shards - 1) * per:
-        raise ValueError(
-            f"cannot pad-and-mask {n} rows over {n_shards} data shards "
-            f"(row multiple {multiple}): the last shard would hold no "
-            "real rows (use fewer shards or more data)")
     fill_rows = jnp.full((pad,) + x.shape[1:], fill, x.dtype)
     return jnp.concatenate([x, fill_rows], axis=0), n
 
@@ -187,7 +182,27 @@ def _make_local_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
                           cross.reshape(xb_loc.shape[0], k_loc, w)
                           .astype(jnp.float32), coef)
 
-    def local_step(state: DistState, xb_loc: jax.Array):
+    def _row_mean(vals_loc, w_loc, b_eff):
+        """Mean of a per-local-row quantity over the REAL batch rows.
+        ``w_loc=None`` (no fully-padded shard possible) keeps the exact
+        historical mean-of-means operation order, so pre-existing
+        trajectories stay bit-identical."""
+        if w_loc is None:
+            m = jnp.mean(vals_loc)
+            for ax in data_axes:
+                m = jax.lax.pmean(m, ax)
+            return m
+        m = jnp.sum(vals_loc * w_loc)
+        for ax in data_axes:
+            m = jax.lax.psum(m, ax)
+        return m / b_eff
+
+    def local_step(state: DistState, xb_loc: jax.Array, w_loc=None,
+                   b_eff=None):
+        """``w_loc``: optional (b_loc,) 0/1 row weights — rows of a fully
+        padded data shard carry weight 0 and contribute to NOTHING (no
+        window append, no count, no objective term); ``b_eff`` is then the
+        real global batch size (static)."""
         k_loc, w, d = state.pts.shape
         m_idx = jax.lax.axis_index(model_axis)
         center_gid0 = m_idx * k_loc  # first global center id on this device
@@ -197,21 +212,23 @@ def _make_local_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
         p_loc = p_of(state.pts, state.coef, xb_loc)                # (b_loc,k_loc)
         d_loc = diag_b[:, None] - 2.0 * p_loc + state.sqnorm[None, :]
         d_all = jax.lax.all_gather(d_loc, model_axis, axis=1, tiled=True)
-        f_before = jnp.mean(jnp.min(d_all, axis=1))
-        for ax in data_axes:
-            f_before = jax.lax.pmean(f_before, ax)
+        f_before = _row_mean(jnp.min(d_all, axis=1), w_loc, b_eff)
         assign_loc = jnp.argmin(d_all, axis=1).astype(jnp.int32)   # global ids
 
         # ---- gather the full batch so center owners can ingest it ---------
-        xb_full, assign = xb_loc, assign_loc
+        xb_full, assign, w_full = xb_loc, assign_loc, w_loc
         for ax in reversed(data_axes):
             xb_full = jax.lax.all_gather(xb_full, ax, axis=0, tiled=True)
             assign = jax.lax.all_gather(assign, ax, axis=0, tiled=True)
+            if w_full is not None:
+                w_full = jax.lax.all_gather(w_full, ax, axis=0, tiled=True)
 
         onehot_loc = jax.nn.one_hot(assign - center_gid0, k_loc,
                                     dtype=jnp.float32)             # (b, k_loc)
+        if w_full is not None:
+            onehot_loc = onehot_loc * w_full[:, None]
         bj = jnp.sum(onehot_loc, axis=0)                           # (k_loc,)
-        alpha = rate_fn(bj, state.counts, b)
+        alpha = rate_fn(bj, state.counts, b if w_loc is None else b_eff)
         decay = 1.0 - alpha
 
         # ---- local ring append --------------------------------------------
@@ -278,9 +295,7 @@ def _make_local_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
         p2 = p_of(new_pts, new_coef, xb_loc)
         d2 = diag_b[:, None] - 2.0 * p2 + new_sqnorm[None, :]
         d2_min = jax.lax.pmin(jnp.min(d2, axis=1), model_axis)     # (b_loc,)
-        f_after = jnp.mean(d2_min)
-        for ax in data_axes:
-            f_after = jax.lax.pmean(f_after, ax)
+        f_after = _row_mean(d2_min, w_loc, b_eff)
 
         new_state = DistState(pts=new_pts, coef=new_coef, head=new_head,
                               sqnorm=new_sqnorm, counts=state.counts + bj,
@@ -316,20 +331,67 @@ def make_dist_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
 
 def _local_sample_bound(mesh: Mesh, data_axes: Sequence[str],
                         n_loc: int, n_valid: Optional[int]):
-    """Upper sampling bound for this shard's local randint draw.
+    """``(bound, has_real)`` for this shard's local randint draw.
 
     ``n_valid=None`` (no padding) keeps the historical static bound — the
-    full local slice.  With ``n_valid`` set (the real global row count of a
-    dataset padded by :func:`pad_for_mesh`), each shard samples only its
-    REAL rows: shard s owns padded rows [s*L, (s+1)*L), of which
-    ``clip(n_valid - s*L, 0, L)`` are real; pad rows (all on the last
-    shard) are masked out of every batch.  Shards with fewer real rows
-    oversample them proportionally — an O(pad/n) stratification skew,
-    traded for never training on synthetic points."""
+    full local slice (``has_real=None``).  With ``n_valid`` set (the real
+    global row count of a dataset padded by :func:`pad_for_mesh`), each
+    shard samples only its REAL rows: shard s owns padded rows
+    [s*L, (s+1)*L), of which ``clip(n_valid - s*L, 0, L)`` are real.  The
+    bound is clamped to >= 1 so the draw stays well-formed on a shard that
+    is ALL padding; such a shard's ``has_real`` flag is False and the step
+    builders zero-weight its rows out of the batch (they never reach a
+    window, a count or an objective — the docstring guarantee "pad rows
+    are masked out of every batch" holds even then).  Shards with fewer
+    real rows oversample them proportionally — an O(pad/n) stratification
+    skew, traded for never training on synthetic points."""
     if n_valid is None:
-        return n_loc
+        return n_loc, None
     start = _replica_index(mesh, data_axes) * n_loc
-    return jnp.clip(n_valid - start, 1, n_loc)
+    real = jnp.clip(n_valid - start, 0, n_loc)
+    return jnp.maximum(real, 1), real > 0
+
+
+def _batch_mask(has_real, b_loc: int, n_shards: int, n_loc: int,
+                n_valid: int):
+    """``(w_loc, b_eff)`` zero-weighting the rows of fully-padded shards:
+    shard s has real rows iff s < ceil(n_valid / L), so the effective
+    global batch size is static."""
+    w_loc = jnp.broadcast_to(has_real.astype(jnp.float32), (b_loc,))
+    n_active = min(n_shards, -(-n_valid // n_loc))
+    return w_loc, b_loc * n_active
+
+
+def _make_sampling_body(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
+                        data_axes: Sequence[str] = ("data",),
+                        model_axis: str = "model",
+                        n_valid: Optional[int] = None):
+    """The UNWRAPPED shard-local sampled step (state, x_loc, key) ->
+    (state, info) — shared by :func:`make_dist_sampling_step` (which
+    shard_maps it over a data x model mesh) and the fused restart program
+    (:func:`repro.core.engine.make_fused_restart_run`, which runs it per
+    restart lane inside a restart x data x model shard_map)."""
+    data_axes = tuple(data_axes)
+    n_shards = _data_shard_count(mesh, data_axes)
+    if cfg.batch_size % n_shards:
+        raise ValueError(f"batch_size {cfg.batch_size} must divide over "
+                         f"{n_shards} data shards (repro.api.KernelKMeans "
+                         "rounds the batch size up automatically)")
+    b_loc = cfg.batch_size // n_shards
+    local_step = _make_local_step(kernel, cfg, mesh, data_axes, model_axis)
+
+    def sampled(state: DistState, x_loc: jax.Array, key: jax.Array):
+        kb = api_keys.shard_key(key, _replica_index(mesh, data_axes))
+        n_loc = x_loc.shape[0]
+        hi, has_real = _local_sample_bound(mesh, data_axes, n_loc, n_valid)
+        bidx = jax.random.randint(kb, (b_loc,), 0, hi, dtype=jnp.int32)
+        if n_valid is not None and n_valid <= (n_shards - 1) * n_loc:
+            w_loc, b_eff = _batch_mask(has_real, b_loc, n_shards, n_loc,
+                                       n_valid)
+            return local_step(state, x_loc[bidx], w_loc=w_loc, b_eff=b_eff)
+        return local_step(state, x_loc[bidx])
+
+    return sampled
 
 
 def make_dist_sampling_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
@@ -344,22 +406,11 @@ def make_dist_sampling_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
 
     ``n_valid``: real row count of a :func:`pad_for_mesh`-padded dataset —
     masks pad rows out of the shard-local draws (see
-    :func:`_local_sample_bound`)."""
+    :func:`_local_sample_bound`); the rows of a shard that is ALL padding
+    are zero-weighted out of the batch entirely."""
     data_axes = tuple(data_axes)
-    n_shards = _data_shard_count(mesh, data_axes)
-    if cfg.batch_size % n_shards:
-        raise ValueError(f"batch_size {cfg.batch_size} must divide over "
-                         f"{n_shards} data shards (repro.api.KernelKMeans "
-                         "rounds the batch size up automatically)")
-    b_loc = cfg.batch_size // n_shards
-    local_step = _make_local_step(kernel, cfg, mesh, data_axes, model_axis)
-
-    def sampled(state: DistState, x_loc: jax.Array, key: jax.Array):
-        kb = api_keys.shard_key(key, _replica_index(mesh, data_axes))
-        hi = _local_sample_bound(mesh, data_axes, x_loc.shape[0], n_valid)
-        bidx = jax.random.randint(kb, (b_loc,), 0, hi, dtype=jnp.int32)
-        return local_step(state, x_loc[bidx])
-
+    sampled = _make_sampling_body(kernel, cfg, mesh, data_axes, model_axis,
+                                  n_valid)
     state_specs = _state_specs(model_axis)
     info_specs = DistInfo(P(), P(), P(), P(model_axis))
 
@@ -465,34 +516,45 @@ def fit_distributed_jit(x: jax.Array, center_pts: jax.Array,
 
 def init_shard_caches(mesh: Mesh, n: int, tile: int, capacity: int,
                       data_axes: Sequence[str] = ("data",),
-                      dtype=jnp.float32):
+                      dtype=jnp.float32, restarts: Optional[int] = None,
+                      restart_axis: str = "restart"):
     """One empty GramTileCache per data shard, stacked on a leading axis
     that is sharded over ``data_axes`` (replicated over 'model' — devices
     along the model axis see the same batch rows, so their cache contents
-    evolve identically)."""
+    evolve identically).
+
+    ``restarts=R`` (the fused restart x data x model plan) prepends a
+    restart axis: one cache per (restart, data-shard) pair, leaves stacked
+    ``(R, S, ...)`` and sharded ``P(restart_axis, data_axes, ...)`` —
+    restarts draw independent batches, so their working sets (and caches)
+    evolve independently."""
     from repro.cache import tile_cache
 
     data_axes = tuple(data_axes)
     s = _data_shard_count(mesh, data_axes)
     c0 = tile_cache.create_cache(n, tile, capacity, dtype)
+    lead = (s,) if restarts is None else (restarts, s)
+    axes = (data_axes,) if restarts is None else (restart_axis, data_axes)
     stacked = jax.tree.map(
-        lambda a: jnp.tile(a[None], (s,) + (1,) * a.ndim), c0)
+        lambda a: jnp.tile(a[(None,) * len(lead)],
+                           lead + (1,) * a.ndim), c0)
     return jax.device_put(stacked, jax.tree.map(
-        lambda a: NamedSharding(mesh, P(data_axes, *([None] * (a.ndim - 1)))),
+        lambda a: NamedSharding(
+            mesh, P(*axes, *([None] * (a.ndim - len(lead))))),
         stacked))
 
 
-def make_cached_dist_sampling_step(base_kernel: KernelFn, x_real: jax.Array,
-                                   cfg: MBConfig, mesh: Mesh,
-                                   data_axes: Sequence[str] = ("data",),
-                                   model_axis: str = "model",
-                                   n_valid: Optional[int] = None):
-    """Cached variant of :func:`make_dist_sampling_step`: returns
-    step(state, caches, x_idx, key) -> (state, caches, info), where x_idx is
-    the (n, 1) index-data dataset row-sharded over ``data_axes`` and
-    ``caches`` the stacked per-shard tile caches of
-    :func:`init_shard_caches`.  ``base_kernel`` / ``x_real`` (the actual
-    coordinates) are closed over and replicated."""
+def _make_cached_sampling_body(base_kernel: KernelFn, x_real: jax.Array,
+                               cfg: MBConfig, mesh: Mesh,
+                               data_axes: Sequence[str] = ("data",),
+                               model_axis: str = "model",
+                               n_valid: Optional[int] = None):
+    """The UNWRAPPED cached shard-local sampled step
+    (state, caches_loc, x_loc, key) -> (state, caches_loc, info) — shared
+    by :func:`make_cached_dist_sampling_step` and the fused restart
+    program.  ``caches_loc`` leaves carry the leading length-1 data-shard
+    stacking axis (what shard_map hands a data shard of the
+    :func:`init_shard_caches` stack)."""
     from repro.cache import tile_cache
     from repro.cache.cached_kernel import CachedKernel
 
@@ -515,9 +577,19 @@ def make_cached_dist_sampling_step(base_kernel: KernelFn, x_real: jax.Array,
     def cached_sampled(state: DistState, caches, x_loc: jax.Array,
                        key: jax.Array):
         kb = api_keys.shard_key(key, _replica_index(mesh, data_axes))
-        hi = _local_sample_bound(mesh, data_axes, x_loc.shape[0], n_valid)
+        n_loc = x_loc.shape[0]
+        hi, has_real = _local_sample_bound(mesh, data_axes, n_loc, n_valid)
         bidx = jax.random.randint(kb, (b_loc,), 0, hi, dtype=jnp.int32)
         xb_loc = x_loc[bidx]                       # (b_loc, 1) global ids
+        w_loc = b_eff = None
+        if n_valid is not None and n_valid <= (n_shards - 1) * n_loc:
+            w_loc, b_eff = _batch_mask(has_real, b_loc, n_shards, n_loc,
+                                       n_valid)
+            # a fully-padded shard's (zero-weighted) draws point at pad
+            # rows — rewrite them to row 0 so the warm set and every
+            # cached lookup stay on REAL, resident tiles
+            xb_loc = jnp.where(has_real, xb_loc[:, 0],
+                               jnp.zeros((), x_loc.dtype))[:, None]
         # Warm set = FULL batch + this shard's current window rows: the
         # local step all_gathers the batch into the center windows, so
         # window rows originate from every data shard — warming only the
@@ -536,8 +608,27 @@ def make_cached_dist_sampling_step(base_kernel: KernelFn, x_real: jax.Array,
                                 jnp.concatenate([ids_full, win_ids]))
         ck = CachedKernel(base=base_kernel, x=x_real, cache=cache)
         local_step = _make_local_step(ck, cfg, mesh, data_axes, model_axis)
-        new_state, info = local_step(state, xb_loc)
+        new_state, info = local_step(state, xb_loc, w_loc=w_loc,
+                                     b_eff=b_eff)
         return new_state, jax.tree.map(lambda a: a[None], cache), info
+
+    return cached_sampled
+
+
+def make_cached_dist_sampling_step(base_kernel: KernelFn, x_real: jax.Array,
+                                   cfg: MBConfig, mesh: Mesh,
+                                   data_axes: Sequence[str] = ("data",),
+                                   model_axis: str = "model",
+                                   n_valid: Optional[int] = None):
+    """Cached variant of :func:`make_dist_sampling_step`: returns
+    step(state, caches, x_idx, key) -> (state, caches, info), where x_idx is
+    the (n, 1) index-data dataset row-sharded over ``data_axes`` and
+    ``caches`` the stacked per-shard tile caches of
+    :func:`init_shard_caches`.  ``base_kernel`` / ``x_real`` (the actual
+    coordinates) are closed over and replicated."""
+    data_axes = tuple(data_axes)
+    cached_sampled = _make_cached_sampling_body(
+        base_kernel, x_real, cfg, mesh, data_axes, model_axis, n_valid)
 
     from repro.cache.tile_cache import GramTileCache
 

@@ -195,6 +195,208 @@ def make_restart_run(kernel: KernelFn, cfg: MBConfig,
     return run
 
 
+def make_fused_restart_run(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
+                           restarts: int,
+                           data_axes=("data",), model_axis: str = "model",
+                           restart_axis: str = "restart",
+                           n_valid: Optional[int] = None,
+                           eval_size: int = 512,
+                           x_real: Optional[jax.Array] = None):
+    """Build the jitted fused restart x data x model program — the
+    ROADMAP's "one compiled program" for R restarts of the SHARDED step,
+    landed behind the ``fused_restart_sharded`` solver registration.
+
+    Composition: the mesh carries a ``restart_axis`` alongside the
+    data/model axes; each restart group runs the unchanged shard-local
+    sampled Algorithm-2 body (``distributed._make_sampling_body``) in its
+    own early-stopped ``lax.while_loop`` — devices of one group share
+    bit-identical improvements, so their loop trip counts (and collectives)
+    agree, while different groups stop independently with no cross-restart
+    sync inside the loop.  Restarts beyond the restart-axis size run as
+    sequential lanes on their group (``R_loc = R / r_size``), which is
+    exactly R sequential sharded fits per group — trajectories are
+    BIT-EXACT against running each restart through
+    :func:`distributed.make_dist_sampling_step` with the same key.
+
+    Winner selection runs sharded on one shared eval batch: per-lane
+    objectives are psum'd over the data axes, all_gather'd over
+    ``restart_axis``, and the argmin state is broadcast back with a masked
+    psum — the host only ever sees the winner.
+
+    ``cfg`` must already be the LOOP config (epsilon lowered for
+    ``early_stop=False`` — see ``executors._loop_mb``).  ``eval_size`` is
+    the global eval-batch row count (must divide the data shards).
+
+    Uncached (``x_real=None``): returns
+    ``run(state0, x, xe, fit_keys) -> EngineResult`` where ``state0`` is
+    the restart-stacked coordinate-window DistState, ``x`` the (padded)
+    dataset sharded over ``data_axes``, ``xe`` the (eval_size, d) eval
+    rows sharded likewise, ``fit_keys`` (R, 2) sharded over
+    ``restart_axis``.  Cached (``x_real`` = real coordinates): ``x`` is
+    the (n, 1) index-data view, ``state0`` index windows, and the
+    signature becomes ``run(state0, caches, x_idx, xe, fit_keys) ->
+    (EngineResult, caches)`` with per-(restart, data-shard) tile caches
+    from ``init_shard_caches(..., restarts=R)`` (``xe`` stays REAL
+    coordinates — scoring resolves window ids through ``x_real``)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import distributed as D
+    from repro.core.compat import shard_map
+    from repro.core.distributed import DistState
+    from repro.core.kernel_fns import kernel_cross, kernel_diag
+    from repro.core.minibatch import run_early_stopped_keyed
+
+    data_axes = tuple(data_axes)
+    r_size = mesh.shape[restart_axis]
+    if restarts % r_size:
+        raise ValueError(f"restarts={restarts} not divisible by mesh axis "
+                         f"{restart_axis!r} of size {r_size}")
+    r_loc = restarts // r_size
+    cached = x_real is not None
+    body = (D._make_cached_sampling_body(kernel, x_real, cfg, mesh,
+                                         data_axes, model_axis, n_valid)
+            if cached else
+            D._make_sampling_body(kernel, cfg, mesh, data_axes, model_axis,
+                                  n_valid))
+
+    def eval_objective(st, xe_loc):
+        """Shared-eval-batch objective of one lane's final centers,
+        sharded over data (rows) x model (centers)."""
+        k_loc, w, d = st.pts.shape
+        if cached:
+            # index windows: resolve support ids through the real
+            # coordinates (``kernel`` is the BASE kernel in cached mode)
+            ids = st.pts[..., 0].reshape(-1).astype(jnp.int32)
+            sup = x_real[ids]
+        else:
+            sup = st.pts.reshape(k_loc * w, d)
+        cross = kernel_cross(kernel, xe_loc, sup).astype(jnp.float32)
+        p = jnp.einsum("bkw,kw->bk",
+                       cross.reshape(xe_loc.shape[0], k_loc, w), st.coef)
+        diag_e = kernel_diag(kernel, xe_loc).astype(jnp.float32)
+        d_loc = diag_e[:, None] - 2.0 * p + st.sqnorm[None, :]
+        d_all = jax.lax.all_gather(d_loc, model_axis, axis=1, tiled=True)
+        part = jnp.sum(jnp.min(d_all, axis=1))
+        for ax in data_axes:
+            part = jax.lax.psum(part, ax)
+        return part / eval_size
+
+    def select_winner(states, objs_loc, iters_loc):
+        """all_gather diagnostics over the restart axis and broadcast the
+        argmin lane's (model-sharded) state to every restart group."""
+        objs = jax.lax.all_gather(objs_loc, restart_axis, axis=0,
+                                  tiled=True)                      # (R,)
+        iters = jax.lax.all_gather(iters_loc, restart_axis, axis=0,
+                                   tiled=True)                     # (R,)
+        best = jnp.argmin(objs).astype(jnp.int32)
+        g = jax.lax.axis_index(restart_axis)
+        in_group = (best // r_loc) == g
+        pick = jnp.where(in_group, best % r_loc, 0)
+        win = jax.tree.map(
+            lambda a: jax.lax.psum(
+                jnp.where(in_group, a[pick], jnp.zeros_like(a[pick])),
+                restart_axis),
+            states)
+        return win, objs, iters, best
+
+    st_stacked = DistState(
+        pts=P(restart_axis, model_axis, None, None),
+        coef=P(restart_axis, model_axis, None),
+        head=P(restart_axis, model_axis),
+        sqnorm=P(restart_axis, model_axis),
+        counts=P(restart_axis, model_axis),
+        step=P(restart_axis))
+    st_win = D._state_specs(model_axis)
+
+    def run_lanes(state_st, caches_st, x_loc, xe_loc, keys_loc):
+        """The shared per-group driver: each local restart lane runs its
+        own early-stopped sharded fit (threading its tile cache through
+        the carry when ``caches_st`` is given), then the winner is picked
+        across the whole restart axis."""
+        states, caches, iters, objs = [], [], [], []
+        for lane in range(r_loc):
+            st_l = jax.tree.map(lambda a: a[lane], state_st)
+            if caches_st is None:
+                def swk(st, kb):
+                    st, info = body(st, x_loc, kb)
+                    return st, info.improvement
+
+                st_f, it_l, _ = run_early_stopped_keyed(
+                    cfg, swk, st_l, keys_loc[lane])
+            else:
+                cc_l = jax.tree.map(lambda a: a[lane], caches_st)
+
+                def swk(carry, kb):
+                    st, cc = carry
+                    st, cc, info = body(st, cc, x_loc, kb)
+                    return (st, cc), info.improvement
+
+                (st_f, cc_l), it_l, _ = run_early_stopped_keyed(
+                    cfg, swk, (st_l, cc_l), keys_loc[lane])
+                caches.append(cc_l)
+            states.append(st_f)
+            iters.append(it_l)
+            objs.append(eval_objective(st_f, xe_loc))
+        states = jax.tree.map(lambda *a: jnp.stack(a), *states)
+        win, objs, iters, best = select_winner(states, jnp.stack(objs),
+                                               jnp.stack(iters))
+        caches_out = (jax.tree.map(lambda *a: jnp.stack(a), *caches)
+                      if caches_st is not None else None)
+        return win, caches_out, objs, iters, best
+
+    if not cached:
+        def fused_local(state_st, x_loc, xe_loc, keys_loc):
+            win, _, objs, iters, best = run_lanes(state_st, None, x_loc,
+                                                  xe_loc, keys_loc)
+            return win, objs, iters, best
+
+        fn = shard_map(
+            fused_local, mesh=mesh,
+            in_specs=(st_stacked, P(data_axes, None), P(data_axes, None),
+                      P(restart_axis, None)),
+            out_specs=(st_win, P(), P(), P()),
+            check_rep=False)
+
+        @jax.jit
+        def run(state0, x, xe, fit_keys):
+            win, objs, iters, best = fn(state0, x, xe, fit_keys)
+            return EngineResult(state=win, objective=objs[best],
+                                objectives=objs, iters=iters, best=best)
+
+        return run
+
+    from repro.cache.tile_cache import GramTileCache
+
+    def fused_local_cached(state_st, caches_st, x_loc, xe_loc, keys_loc):
+        return run_lanes(state_st, caches_st, x_loc, xe_loc, keys_loc)
+
+    cache_specs = GramTileCache(
+        store=P(restart_axis, data_axes, None, None, None),
+        keys=P(restart_axis, data_axes, None),
+        stamp=P(restart_axis, data_axes, None),
+        clock=P(restart_axis, data_axes),
+        hits=P(restart_axis, data_axes),
+        misses=P(restart_axis, data_axes),
+        evictions=P(restart_axis, data_axes))
+
+    fn = shard_map(
+        fused_local_cached, mesh=mesh,
+        in_specs=(st_stacked, cache_specs, P(data_axes, None),
+                  P(data_axes, None), P(restart_axis, None)),
+        out_specs=(st_win, cache_specs, P(), P(), P()),
+        check_rep=False)
+
+    @jax.jit
+    def run(state0, caches0, x_idx, xe, fit_keys):
+        win, caches, objs, iters, best = fn(state0, caches0, x_idx, xe,
+                                            fit_keys)
+        return EngineResult(state=win, objective=objs[best],
+                            objectives=objs, iters=iters,
+                            best=best), caches
+
+    return run
+
+
 class MultiRestartEngine:
     """Stateful wrapper: holds (kernel, cfg, restarts, mesh) and exposes
     ``fit`` / ``predict``.  ``mesh=None`` runs all restarts on one device

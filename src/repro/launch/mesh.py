@@ -43,5 +43,29 @@ def make_restart_mesh(restarts: int, axis: str = "restart"):
     return jax.make_mesh((size,), (axis,), devices=devs[:size])
 
 
+def make_fused_mesh(restarts: int, model: int = 1,
+                    axes: tuple = ("restart", "data", "model")):
+    """3-axis mesh for the fused restart x data x model solver plan
+    (``fused_restart_sharded``): the restart axis takes the largest device
+    count <= min(restarts, n_devices) that DIVIDES ``restarts`` (each
+    device owns a whole number of restart lanes, like
+    :func:`make_restart_mesh`); the remaining devices split into
+    data x model.  E.g. R=4 on 8 devices -> (4, 2, 1); R=2 on 8 with
+    model=2 -> (2, 2, 2); 1 device -> (1, 1, 1) with all R restarts as
+    sequential lanes on it."""
+    devs = jax.devices()
+    n = len(devs)
+    r = next(d for d in range(min(restarts, n), 0, -1) if restarts % d == 0)
+    rem = n // r
+    if model < 1 or model > rem or rem % model:
+        raise ValueError(
+            f"model={model} does not divide the {rem} devices left after "
+            f"the restart axis takes {r} of {n} (pick a model split that "
+            f"divides {rem}, or shrink the restart count)")
+    data = max(rem // model, 1)
+    return jax.make_mesh((r, data, model), axes,
+                         devices=devs[:r * data * model])
+
+
 def data_axes_of(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a != "model")

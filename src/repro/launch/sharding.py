@@ -211,6 +211,24 @@ def restart_placements(mesh: Mesh, restart_axis: str, sharded: Any,
     return sh, rep
 
 
+def fused_state_placements(mesh: Mesh, restart_axis: str = "restart",
+                           model_axis: str = "model"):
+    """NamedShardings for a restart-STACKED ``DistState`` (a leading (R,)
+    axis on every leaf) on a restart x data x model mesh — the initial
+    placement of the ``fused_restart_sharded`` plan: restarts split over
+    ``restart_axis``, centers over ``model_axis``, everything replicated
+    over the data axes (the dataset itself is placed separately,
+    row-sharded over data)."""
+    from repro.core.distributed import DistState
+
+    r, m = restart_axis, model_axis
+    spec = DistState(pts=P(r, m, None, None), coef=P(r, m, None),
+                     head=P(r, m), sqnorm=P(r, m), counts=P(r, m),
+                     step=P(r))
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
 # ------------------------------------------------------------- train state
 def train_state_specs(state_shape: Any, mesh: Mesh, hybrid: bool = False,
                       replicate_patterns: tuple = ()):

@@ -181,10 +181,76 @@ def test_save_load_predict_roundtrip(tmp_path):
                                    np.asarray(est.transform(x[:9])),
                                    atol=1e-6)
         assert served.config.k == cfg.k
-        # serving-only estimators refuse to resume
-        with pytest.raises(RuntimeError):
-            KernelKMeans.load(p)._outcome or (_ for _ in ()).throw(
-                RuntimeError("no outcome"))
+        if cfg.cache == "none":
+            # partial_fit-capable plan: the full FitCarry round-trips
+            assert served._outcome is not None
+            assert served._outcome.key is not None
+        else:
+            # serving-only (no resumable carry saved)
+            assert served._outcome is None
+
+
+def test_save_load_roundtrips_partial_fit_carry(tmp_path):
+    """fit(a); save; load; partial_fit(b) must be BIT-identical to
+    fit(a); partial_fit(b): the carry (center state, PRNG fit key,
+    nested-sampler step cursor) survives serialization exactly."""
+    x, b = _blobs(seed=0), _blobs(seed=3)
+    key = jax.random.PRNGKey(5)
+    for kw in (dict(jit=False), dict(jit=True),
+               dict(jit=False, sampler="nested")):
+        cfg = _cfg(max_iters=7, **kw)
+        ref = KernelKMeans(cfg).fit(x, key).partial_fit(b, iters=5)
+        est = KernelKMeans(cfg).fit(x, key)
+        p = str(tmp_path / "carry.npz")
+        est.save(p)
+        loaded = KernelKMeans.load(p)
+        # serving before resume still works (and matches the saved fit)
+        np.testing.assert_array_equal(np.asarray(loaded.predict(x[:31])),
+                                      np.asarray(est.predict(x[:31])))
+        loaded.partial_fit(b, iters=5)
+        np.testing.assert_array_equal(np.asarray(ref.state_.idx),
+                                      np.asarray(loaded.state_.idx),
+                                      err_msg=str(kw))
+        np.testing.assert_allclose(np.asarray(ref.state_.sqnorm),
+                                   np.asarray(loaded.state_.sqnorm),
+                                   atol=0, err_msg=str(kw))
+        # a re-save after load keeps the carry (still resumable)
+        p2 = str(tmp_path / "carry2.npz")
+        KernelKMeans.load(p).save(p2)
+        assert KernelKMeans.load(p2)._outcome is not None
+
+
+def test_loaded_carry_resumes_on_saved_plan_not_auto(tmp_path):
+    """Regression: partial_fit on a load()ed estimator must resume on the
+    plan that PRODUCED the carry — a cache='auto' fit on large data
+    (plan 'single') resumed on small data used to re-resolve to
+    'single_precomputed' and raise NotImplementedError."""
+    from repro.api.config import PRECOMPUTED_AUTO_MAX_ELEMS
+
+    n_big = int(np.sqrt(PRECOMPUTED_AUTO_MAX_ELEMS)) + 8   # auto -> none
+    x, _ = blobs(n=n_big, d=4, k=2, seed=0)
+    x = jnp.asarray(x)
+    b = _blobs(n=64, d=4, k=2, seed=3)
+    cfg = SolverConfig(k=2, batch_size=16, tau=8, max_iters=3,
+                       epsilon=-1.0, kernel=GAUSS, cache="auto",
+                       distribution="single", jit=True)
+    key = jax.random.PRNGKey(2)
+    ref = KernelKMeans(cfg).fit(x, key)
+    assert ref.plan_.name == "single"
+    p = str(tmp_path / "auto_carry.npz")
+    ref.save(p)
+    loaded = KernelKMeans.load(p).partial_fit(b, iters=2)
+    ref.partial_fit(b, iters=2)
+    assert loaded.plan_.name == "single"
+    np.testing.assert_array_equal(np.asarray(ref.state_.idx),
+                                  np.asarray(loaded.state_.idx))
+    np.testing.assert_allclose(np.asarray(ref.state_.sqnorm),
+                               np.asarray(loaded.state_.sqnorm), atol=0)
+    # ...but a subsequent FULL fit re-resolves through the registry: on
+    # small data the auto cache axis picks the precomputed plan again
+    # (the carry-forced executor must not leak past the resume)
+    loaded.fit(b, key)
+    assert loaded.plan_.name == "single_precomputed"
 
 
 def test_partial_fit_matches_one_long_fit():
@@ -269,11 +335,28 @@ def test_partial_fit_unsupported_plans_raise():
 # ------------------------------------------------------------ solver registry
 def test_unmatched_config_names_register_solver():
     x = _blobs()
-    # restarts > 1 on the sharded path: the roadmap's fused program — not
-    # implemented, must point at the registry
-    cfg = _cfg(restarts=2, distribution="sharded")
+    # restarts > 1 x sharded is claimed by the fused plan for jit=True
+    # only; the host-driven (jit=False) point stays unclaimed and must
+    # point at the registry
+    cfg = _cfg(restarts=2, distribution="sharded", jit=False)
     with pytest.raises(NotImplementedError, match="register_solver"):
         KernelKMeans(cfg).fit(x, jax.random.PRNGKey(0))
+
+
+def test_fused_plan_claims_restarts_sharded_jit():
+    """The acceptance point: SolverConfig(restarts=4,
+    distribution='sharded') resolves to the fused plan via the registry —
+    no new fit_* function anywhere."""
+    from repro.api.plan import resolve_plan as rp
+
+    cfg = SolverConfig(kernel=GAUSS, restarts=4, distribution="sharded")
+    mesh = jax.make_mesh((1, 1, 1), ("restart", "data", "model"),
+                         devices=jax.devices()[:1])
+    plan = rp(cfg, n=256, mesh=mesh)
+    assert plan.name == "fused_restart_sharded"
+    assert plan.config.cache == "none"          # auto -> none when sharded
+    assert plan.config.restart_axis == "restart"  # pinned by resolve()
+    assert "fused_restart_sharded" in list_solvers()
 
 
 def test_register_solver_claims_a_config_point():

@@ -222,6 +222,122 @@ def test_point_restarts_on_restart_mesh():
                                   np.asarray(res.objectives))
 
 
+# -------------------------------------- fused restart x data x model family
+def _fused_mesh1():
+    return jax.make_mesh((1, 1, 1), ("restart", "data", "model"),
+                         devices=jax.devices()[:1])
+
+
+def _sequential_sharded_fits(x, mb, key, restarts, mesh2):
+    """R sequential sharded fits with the fused plan's exact per-restart
+    key derivation — the fused program's ground truth."""
+    from repro.core.distributed import (
+        init_dist_state, make_dist_sampling_step, state_shardings)
+    from repro.core.engine import make_init_run
+    from repro.core.minibatch import run_early_stopped_keyed
+    from repro.core.state import window_size
+
+    k_init, k_fit, k_eval = api_keys.restart_keys(key)
+    init_idx = make_init_run(GAUSS, mb, "kmeans++")(
+        api_keys.per_restart(k_init, restarts), x)
+    fit_keys = api_keys.per_restart(k_fit, restarts)
+    w = window_size(mb.batch_size, mb.tau)
+    step = make_dist_sampling_step(GAUSS, mb, mesh2, n_valid=None)
+
+    @jax.jit
+    def run_one(state, xs, kk):
+        def swk(st, kb):
+            st, info = step(st, xs, kb)
+            return st, info.improvement
+
+        return run_early_stopped_keyed(mb, swk, state, kk)
+
+    finals, iters = [], []
+    for r in range(restarts):
+        st0 = jax.device_put(init_dist_state(x[init_idx[r]], GAUSS, w),
+                             state_shardings(mesh2))
+        stf, it, _ = run_one(st0, x, fit_keys[r])
+        finals.append(jax.device_get(stf))
+        iters.append(int(it))
+    return finals, iters, k_eval
+
+
+def test_point_fused_restart_sharded_vs_sequential_sharded():
+    """The tentpole grid point: restarts>1 x sharded resolves to the
+    fused plan through the REGISTRY (no fit_* twin exists) and returns
+    the best-restart state BIT-EXACTLY equal to R sequential sharded fits
+    with the same per-restart keys."""
+    from repro.core.kernel_fns import kernel_cross, kernel_diag
+    from repro.core.minibatch import sample_batch
+
+    R = 3
+    x = _blobs()
+    est = KernelKMeans(_cfg(cache="none", distribution="sharded",
+                            jit=True, restarts=R),
+                       mesh=_fused_mesh1()).fit(x, KEY)
+    assert est.plan_.name == "fused_restart_sharded"
+    res = est.result_
+    assert res.objectives.shape == (R,)
+    assert int(res.best) == int(np.argmin(np.asarray(res.objectives)))
+
+    finals, iters, k_eval = _sequential_sharded_fits(
+        x, est.config.mb_config(), KEY, R, _mesh1())
+    assert [int(i) for i in np.asarray(res.iters)] == iters
+    win = finals[int(res.best)]
+    for name in ("pts", "coef", "head", "sqnorm", "counts"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(est.state_, name)),
+            np.asarray(getattr(win, name)), err_msg=name)
+
+    # the sharded shared-eval-batch objectives agree with a dense
+    # single-device recomputation on the same eval rows
+    eb = est.plan_.executor._eval_size(x.shape[0])
+    xe = x[sample_batch(k_eval, x.shape[0], eb)]
+    diag_e = np.asarray(kernel_diag(GAUSS, xe))
+    for r in range(R):
+        st = finals[r]
+        k, w, d = st.pts.shape
+        cross = np.asarray(kernel_cross(GAUSS, xe,
+                                        st.pts.reshape(k * w, d)))
+        p = np.einsum("bkw,kw->bk", cross.reshape(-1, k, w),
+                      np.asarray(st.coef))
+        dist = diag_e[:, None] - 2.0 * p + np.asarray(st.sqnorm)[None, :]
+        np.testing.assert_allclose(float(np.mean(dist.min(axis=1))),
+                                   float(res.objectives[r]), rtol=1e-5)
+
+
+def test_point_fused_restart_sharded_lru_matches_uncached():
+    """cache='lru' on the fused plan (per-(restart, data-shard) tile
+    caches in the while_loop carry) keeps the uncached trajectories to
+    the PR-2 equivalence bar: same iteration counts, same batch counts,
+    sqnorm within tile-Gram float rounding, same winner."""
+    R = 2
+    x = _blobs()
+    base = dict(distribution="sharded", jit=True, restarts=R)
+    eu = KernelKMeans(_cfg(cache="none", **base),
+                      mesh=_fused_mesh1()).fit(x, KEY)
+    ec = KernelKMeans(_cfg(cache="lru", cache_tile=32, cache_capacity=16,
+                           **base), mesh=_fused_mesh1()).fit(x, KEY)
+    assert ec.plan_.name == "fused_restart_sharded"
+    np.testing.assert_array_equal(np.asarray(eu.result_.iters),
+                                  np.asarray(ec.result_.iters))
+    assert int(eu.result_.best) == int(ec.result_.best)
+    np.testing.assert_array_equal(np.asarray(eu.state_.counts),
+                                  np.asarray(ec.state_.counts))
+    np.testing.assert_allclose(np.asarray(eu.state_.sqnorm),
+                               np.asarray(ec.state_.sqnorm), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(eu.result_.objectives),
+                               np.asarray(ec.result_.objectives),
+                               atol=1e-5)
+    # per-(restart, shard) caches saw real traffic, and serving works
+    from repro.cache import stats
+    for r in range(R):
+        s = stats(jax.tree.map(lambda a: a[r, 0], ec._outcome.caches))
+        assert s["hits"] > 0, (r, s)
+    lab = ec.predict(x[:64])
+    assert lab.shape == (64,) and int(jnp.max(lab)) < 4
+
+
 # -------------------------------------------------- pad-and-mask (1 device)
 def test_n_valid_none_matches_legacy_bound_single_shard():
     """n_valid == full rows on a 1-shard mesh: the masked sampler bound is
@@ -355,3 +471,92 @@ PAD_MASK = """
 @pytest.mark.slow
 def test_pad_and_mask_8dev():
     _run_sub(PAD_MASK, "PAD_MASK_OK")
+
+
+FUSED_8DEV = """
+    import warnings; warnings.simplefilter("ignore", DeprecationWarning)
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.api import KernelKMeans, SolverConfig
+    from repro.api import keys as api_keys
+    from repro.core import Gaussian
+    from repro.core.distributed import (
+        init_dist_state, make_dist_sampling_step, state_shardings)
+    from repro.core.engine import make_init_run
+    from repro.core.minibatch import run_early_stopped_keyed
+    from repro.core.state import window_size
+    from repro.data import blobs
+
+    assert len(jax.devices()) == 8, jax.devices()
+    R = 4
+    mesh = jax.make_mesh((2, 2, 2), ("restart", "data", "model"))
+    kern = Gaussian(kappa=jnp.float32(2.0))
+    cfg = SolverConfig(k=8, batch_size=128, tau=64, max_iters=6,
+                       epsilon=-1.0, kernel=kern, cache="none",
+                       distribution="sharded", restarts=R, jit=True)
+    key = jax.random.PRNGKey(7)
+    x, _ = blobs(n=2048, d=16, k=8, seed=0)
+    x = jnp.asarray(x)
+    est = KernelKMeans(cfg, mesh=mesh).fit(x, key)
+    assert est.plan_.name == "fused_restart_sharded"
+    res = est.result_
+
+    # ground truth: R sequential sharded fits on the (data, model)
+    # submesh with the fused plan's exact per-restart keys
+    mesh2 = jax.make_mesh((2, 2), ("data", "model"),
+                          devices=jax.devices()[:4])
+    mb = cfg.mb_config()
+    k_init, k_fit, k_eval = api_keys.restart_keys(key)
+    init_idx = make_init_run(kern, mb, "kmeans++")(
+        api_keys.per_restart(k_init, R), x)
+    fit_keys = api_keys.per_restart(k_fit, R)
+    w = window_size(mb.batch_size, mb.tau)
+    step = make_dist_sampling_step(kern, mb, mesh2, n_valid=None)
+
+    @jax.jit
+    def run_one(state, xs, kk):
+        def swk(st, kb):
+            st, info = step(st, xs, kb)
+            return st, info.improvement
+        return run_early_stopped_keyed(mb, swk, state, kk)
+
+    finals = []
+    for r in range(R):
+        st0 = jax.device_put(init_dist_state(x[init_idx[r]], kern, w),
+                             state_shardings(mesh2))
+        stf, it, _ = run_one(st0, x, fit_keys[r])
+        assert int(it) == int(res.iters[r]), r
+        finals.append(jax.device_get(stf))
+    win = finals[int(res.best)]
+    for name in ("pts", "coef", "head", "sqnorm", "counts"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(est.state_, name)),
+            np.asarray(getattr(win, name)), err_msg=name)
+
+    # sharded serving straight off the fused mesh
+    lab = est.predict(x[:999])
+    assert lab.shape == (999,)
+    assert 0 <= int(jnp.min(lab)) and int(jnp.max(lab)) < 8
+
+    # cached fused plan: per-(restart, data-shard) caches, PR-2
+    # equivalence bar vs the uncached fused fit
+    from repro.cache import stats
+    cfg_c = cfg.replace(cache="lru", cache_tile=128, cache_capacity=16)
+    ec = KernelKMeans(cfg_c, mesh=mesh).fit(x, key)
+    np.testing.assert_array_equal(np.asarray(ec.result_.iters),
+                                  np.asarray(res.iters))
+    assert int(ec.result_.best) == int(res.best)
+    np.testing.assert_array_equal(np.asarray(ec.state_.counts),
+                                  np.asarray(est.state_.counts))
+    np.testing.assert_allclose(np.asarray(ec.state_.sqnorm),
+                               np.asarray(est.state_.sqnorm), atol=1e-5)
+    for r in range(R):
+        for s in range(2):
+            st = stats(jax.tree.map(lambda a: a[r, s], ec._outcome.caches))
+            assert st["hits"] > 0 and st["misses"] >= 1, (r, s, st)
+    print("FUSED_8DEV_OK")
+"""
+
+
+@pytest.mark.slow
+def test_fused_restart_sharded_8dev():
+    _run_sub(FUSED_8DEV, "FUSED_8DEV_OK")
