@@ -537,6 +537,86 @@ def bench_kernel_cache(fast: bool):
     print(f"kernel_cache_reduction,,{reduction:.1f}x_fewer_kernel_evals")
 
 
+# --------------------------------------------------------------- step fuse
+def bench_step_fuse(fast: bool):
+    """PR-5 tentpole gate: the streaming fused step (`step="fused"` —
+    online-argmin assignment, slab-chunked sqnorm recompute, no
+    materialized (b, k*W) strip) must beat the composed op chain on BOTH
+    wall-clock and peak per-step temp memory (XLA compiled memory
+    analysis), while staying bit-identical at f32.  Writes
+    BENCH_step_fuse.json; asserted, so CI gates on it.
+
+    The shape is assignment-dominated (k large, tau small relative to b):
+    that is the regime the paper's O(k b (tau+b)) term governs and where
+    the strip the fused step never materializes is the dominant
+    intermediate."""
+    import json
+    import os
+
+    from repro.core.minibatch import make_step
+    from repro.core.state import init_state, window_size
+
+    if fast:
+        n, d, k, b, tau, reps = 4096, 32, 32, 512, 64, 3
+    else:
+        n, d, k, b, tau, reps = 8192, 64, 64, 1024, 64, 5
+    x, _ = blobs(n=n, d=d, k=min(k, 16), seed=0)
+    x = jnp.asarray(x)
+    init_idx = (jnp.arange(k, dtype=jnp.int32) * 17) % n
+    bidx = sample_batch(jax.random.PRNGKey(0), n, b)
+
+    results = {}
+    outs = {}
+    for impl in ("composed", "fused"):
+        cfg = MBConfig(k=k, batch_size=b, tau=tau, max_iters=5,
+                       epsilon=-1.0, step=impl)
+        st0 = init_state(x, init_idx, GAUSS, window_size(b, tau))
+        step = jax.jit(make_step(GAUSS, cfg))
+        temp_bytes = step.lower(st0, x, bidx).compile() \
+            .memory_analysis().temp_size_in_bytes
+        out = step(st0, x, bidx)
+        jax.block_until_ready(out[0].sqnorm)        # compile + warm
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = step(st0, x, bidx)
+            jax.block_until_ready(out[0].sqnorm)
+            times.append(time.perf_counter() - t0)
+        results[impl] = (min(times), temp_bytes)
+        outs[impl] = out
+        print(f"step_fuse_{impl},{min(times) * 1e6:.0f},"
+              f"temp_{temp_bytes / 1e6:.0f}MB")
+
+    bit_identical = bool(
+        np.array_equal(np.asarray(outs["composed"][0].sqnorm),
+                       np.asarray(outs["fused"][0].sqnorm))
+        and np.array_equal(np.asarray(outs["composed"][0].idx),
+                           np.asarray(outs["fused"][0].idx))
+        and np.array_equal(np.asarray(outs["composed"][1].improvement),
+                           np.asarray(outs["fused"][1].improvement)))
+    t_c, m_c = results["composed"]
+    t_f, m_f = results["fused"]
+    out = dict(
+        workload=dict(n=n, d=d, k=k, batch_size=b, tau=tau,
+                      window=tau + b, reps=reps, fast=fast,
+                      backend=jax.default_backend()),
+        composed=dict(step_ms=t_c * 1e3, temp_bytes=m_c),
+        fused=dict(step_ms=t_f * 1e3, temp_bytes=m_f),
+        speedup_x=t_c / t_f, temp_reduction_x=m_c / max(m_f, 1),
+        bit_identical=bit_identical,
+        fused_faster=bool(t_f < t_c),
+        fused_smaller=bool(m_f < m_c))
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with open(os.path.join(root, "BENCH_step_fuse.json"), "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"step_fuse_speedup,,{t_c / t_f:.2f}x_wall_clock")
+    print(f"step_fuse_temp_reduction,,{m_c / max(m_f, 1):.2f}x_peak_temp")
+    assert bit_identical, "fused step diverged from composed at f32"
+    assert t_f < t_c, (f"fused {t_f * 1e3:.0f}ms not faster than "
+                       f"composed {t_c * 1e3:.0f}ms")
+    assert m_f < m_c, (f"fused temp {m_f} not below composed {m_c}")
+
+
 # ------------------------------------------------------------- api overhead
 def bench_api_overhead(fast: bool):
     """Estimator-vs-direct parity: KernelKMeans dispatch must resolve at
@@ -617,6 +697,7 @@ BENCHES = {
     "multi_restart": bench_multi_restart,
     "fused_restarts": bench_fused_restarts,
     "kernel_cache": bench_kernel_cache,
+    "step_fuse": bench_step_fuse,
     "api_overhead": bench_api_overhead,
     "n_independence": bench_n_independence,
     "quality": bench_quality,

@@ -10,6 +10,11 @@ independent config axes:
     restarts      R >= 1
     sampler       'iid' | 'nested'
     jit           host-driven loop (False) vs one compiled while_loop (True)
+    step          'composed' | 'fused' | 'auto'  — inner-step implementation
+                  ('fused': streaming one-pass Pallas step, docs/perf.md)
+    precision     'f32' | 'bf16' — kernel-eval coordinate precision
+                  (accumulation always stays f32)
+    prefetch      one-deep batch pipeline on the host-driven plans
 
 plus the Algorithm-2 statics that previously lived in
 :class:`repro.core.minibatch.MBConfig` (``k``, ``batch_size``, ``tau``,
@@ -33,6 +38,8 @@ from repro.core.minibatch import MBConfig
 _CACHE_VALUES = ("none", "lru", "precomputed", "auto")
 _DISTRIBUTION_VALUES = ("single", "sharded", "auto")
 _SAMPLER_VALUES = ("iid", "nested")
+_STEP_VALUES = ("composed", "fused", "auto")
+_PRECISION_VALUES = ("f32", "bf16")
 
 # cache='auto' precomputes the full Gram while n^2 stays under this many
 # elements (f32: 64 MB) — beyond that it falls back to the LRU tile cache
@@ -73,6 +80,9 @@ class SolverConfig:
     restarts: int = 1
     sampler: str = "iid"
     jit: bool = True
+    step: str = "auto"
+    precision: str = "f32"
+    prefetch: bool = True
 
     # ---- cache knobs ----------------------------------------------------
     cache_tile: int = 256
@@ -101,6 +111,11 @@ class SolverConfig:
         if self.sampler not in _SAMPLER_VALUES:
             raise ValueError(f"sampler={self.sampler!r} not in "
                              f"{_SAMPLER_VALUES}")
+        if self.step not in _STEP_VALUES:
+            raise ValueError(f"step={self.step!r} not in {_STEP_VALUES}")
+        if self.precision not in _PRECISION_VALUES:
+            raise ValueError(f"precision={self.precision!r} not in "
+                             f"{_PRECISION_VALUES}")
         if self.restarts < 1:
             raise ValueError("restarts must be >= 1")
         if self.init not in ("kmeans++", "random"):
@@ -117,14 +132,34 @@ class SolverConfig:
     def replace(self, **changes) -> "SolverConfig":
         return dataclasses.replace(self, **changes)
 
+    def resolved_step(self) -> str:
+        """The concrete step implementation this config runs with.
+        ``step='auto'`` picks the streaming fused step where its Pallas
+        kernels compile natively (TPU) and the paper-faithful
+        recompute/direct modes are in effect; everywhere else the
+        composed chain (non-TPU backends run the fused step only on
+        request — its structural XLA fallback is bit-identical but the
+        composed chain is the long-validated default)."""
+        if self.step != "auto":
+            return self.step
+        if self.sqnorm_mode != "recompute" or self.eval_mode != "direct":
+            return "composed"
+        import jax
+        return "fused" if jax.default_backend() == "tpu" else "composed"
+
     def mb_config(self) -> MBConfig:
-        """The Algorithm-2 static config this point runs with."""
+        """The Algorithm-2 static config this point runs with.  The
+        ``precision`` axis lowers to the kernel-eval compute dtype
+        (``bf16`` -> bfloat16 coordinates, f32 accumulation); ``step``
+        resolves through :meth:`resolved_step`."""
+        cdt = "bfloat16" if self.precision == "bf16" else self.compute_dtype
         return MBConfig(k=self.k, batch_size=self.batch_size, tau=self.tau,
                         rate=self.rate, sqnorm_mode=self.sqnorm_mode,
                         eval_mode=self.eval_mode, epsilon=self.epsilon,
                         max_iters=self.max_iters,
                         use_pallas=self.use_pallas,
-                        compute_dtype=self.compute_dtype)
+                        compute_dtype=cdt,
+                        step=self.resolved_step())
 
     def make_kernel_fn(self) -> KernelFn:
         """Resolve the kernel axis to an actual kernel pytree (registry
@@ -163,6 +198,8 @@ class SolverConfig:
             # the fused restart x data x model plan needs a named restart
             # mesh axis; pin the canonical name (make_fused_mesh's default)
             changes["restart_axis"] = "restart"
+        if self.step == "auto":
+            changes["step"] = self.resolved_step()
         return self.replace(**changes) if changes else self
 
     def axes_repr(self) -> str:
@@ -170,7 +207,8 @@ class SolverConfig:
         plan descriptions)."""
         return (f"cache={self.cache!r} distribution={self.distribution!r} "
                 f"restarts={self.restarts} sampler={self.sampler!r} "
-                f"jit={self.jit}")
+                f"jit={self.jit} step={self.step!r} "
+                f"precision={self.precision!r}")
 
 
 def field_names() -> Tuple[str, ...]:

@@ -106,7 +106,14 @@ class KernelKMeans:
         (default ``config.max_iters``), resuming the batch-key stream
         exactly where the previous call stopped — ``fit(max_iters=a+b)``
         and ``fit(max_iters=a); partial_fit(iters=b)`` draw identical
-        batches.  Single-restart, single-device plans only."""
+        batches.  Single-restart, single-device plans only.
+
+        .. note:: on the compiled (``jit=True``) plan the resume program
+           DONATES the previous fitted state's buffers (steady-state
+           partial_fit chains allocate nothing per call) — a reference
+           to the pre-call ``state_`` is dead afterwards; snapshot it
+           with ``jax.device_get`` / ``np.asarray`` first if you need
+           the before/after pair."""
         X = jnp.asarray(X)
         iters = iters if iters is not None else self.config.max_iters
         if self._outcome is None:

@@ -21,6 +21,7 @@ from typing import Any, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api import keys as api_keys
 from repro.api.config import SolverConfig
@@ -33,6 +34,71 @@ from repro.core.state import init_state, window_size
 
 _assign = jax.jit(assign_chunked, static_argnames=("chunk",))
 _distances = jax.jit(center_distances_chunked, static_argnames=("chunk",))
+
+
+# ---------------------------------------------------------------------------
+# Cross-executor compiled-program cache.
+#
+# Executors already cache their compiled programs on the instance, but the
+# instance is rebuilt whenever a plan is re-resolved (a fresh KernelKMeans
+# per fit, the legacy shims, plan signature changes) — and every rebuild
+# used to re-bind (re-trace, re-compile) programs whose closure is
+# IDENTICAL: same Algorithm-2 statics, same kernel values, same mesh, same
+# donated-argnum signature.  This registry keys compiled programs on
+# exactly that closure signature, so repeated ``fit`` / ``partial_fit`` on
+# same-shape data reuses ONE executable across executor instances.
+# Kernels with large array leaves (Precomputed grams, cached kernels) are
+# not value-keyed — id() reuse after GC could alias two different datasets
+# — so those programs stay instance-local, the historical behaviour.
+#
+# ``program_builds()`` counts actual program constructions (the
+# compile-counter hook tests/test_fused_step.py regresses against).
+
+_PROGRAM_CACHE: dict = {}        # insertion-ordered (LRU via re-insert)
+_PROGRAM_CACHE_MAX = 128         # distinct (config, kernel, mesh) closures
+_PROGRAM_BUILDS = [0]
+
+
+def program_builds() -> int:
+    """How many compiled fit programs have been BUILT (not reused) since
+    import — a monotone counter; snapshot it around a fit to assert the
+    fit re-bound nothing."""
+    return _PROGRAM_BUILDS[0]
+
+
+def clear_program_cache() -> None:
+    _PROGRAM_CACHE.clear()
+
+
+def _cache_put(key, prog) -> None:
+    """Insert with LRU eviction: the registry is process-lifetime, and
+    keys carry dataset-dependent parts (padded sizes, max_iters), so a
+    long-running service fitting many shapes must not pin every
+    executable it ever compiled.  Evicted programs stay alive as long as
+    some executor instance still holds them (``self._programs``)."""
+    _PROGRAM_CACHE[key] = prog
+    while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_MAX:
+        _PROGRAM_CACHE.pop(next(iter(_PROGRAM_CACHE)))
+
+
+def _cache_get(key):
+    prog = _PROGRAM_CACHE.pop(key, None)
+    if prog is not None:
+        _PROGRAM_CACHE[key] = prog        # refresh recency
+    return prog
+
+
+def _kernel_sig(kernel):
+    """Value signature of a kernel pytree, or None when any leaf is too
+    large to key by value (then programs must stay instance-local)."""
+    leaves, treedef = jax.tree_util.tree_flatten(kernel)
+    sig = []
+    for leaf in leaves:
+        a = np.asarray(leaf)
+        if a.size > 64:
+            return None
+        sig.append((a.dtype.str, a.shape, a.tobytes()))
+    return (treedef, tuple(sig))
 
 
 @dataclasses.dataclass
@@ -118,6 +184,31 @@ class Executor:
         self.mesh = mesh
         self.kernel = config.make_kernel_fn()
         self.mb = config.mb_config()
+        self._programs = {}      # instance-local compiled-program cache
+
+    def _program(self, key, build, kernel_free: bool = False):
+        """Compiled-program lookup: instance cache first, then the
+        cross-executor registry (see module docs above).  ``key`` must
+        capture the FULL closure signature minus the kernel — loop
+        statics, mesh/axes, and the donated-argnum signature.  The kernel
+        is value-keyed when its leaves are small; ``kernel_free`` marks
+        programs that take the kernel as a traced ARGUMENT (nothing
+        kernel-shaped in the closure), which share unconditionally."""
+        prog = self._programs.get(key)
+        if prog is None:
+            ksig = True if kernel_free else _kernel_sig(self.kernel)
+            if ksig is None:
+                _PROGRAM_BUILDS[0] += 1
+                prog = build()
+            else:
+                gkey = (type(self).__name__, key, ksig)
+                prog = _cache_get(gkey)
+                if prog is None:
+                    _PROGRAM_BUILDS[0] += 1
+                    prog = build()
+                    _cache_put(gkey, prog)
+            self._programs[key] = prog
+        return prog
 
     # -- fitting ----------------------------------------------------------
     def fit(self, x, key, init_idx=None, center_pts=None,
@@ -188,41 +279,41 @@ class SingleExecutor(Executor):
     name = "single"
     supports_partial_fit = True
 
-    def __init__(self, config, mesh=None):
-        super().__init__(config, mesh)
-        self._host_step = None
-        self._runs = {}       # ("init"|"resume", max_iters) -> compiled run
-
     def _ensure_host_step(self):
-        if self._host_step is None:
-            self._host_step = jax.jit(make_step(self.kernel, self.mb),
-                                      donate_argnums=(0,))
-        return self._host_step
+        # donate the carried CenterState — the host loop threads it
+        return self._program(
+            ("host_step", self.mb, ("donate", 0)),
+            lambda: jax.jit(make_step(self.kernel, self.mb),
+                            donate_argnums=(0,)))
 
     def _jit_run(self, kind: str, max_iters: int):
-        run = self._runs.get((kind, max_iters))
-        if run is None:
-            kernel = self.kernel
-            mb = _loop_mb(self.mb, self.config.early_stop,
-                          max_iters=max_iters)
-            w = window_size(mb.batch_size, mb.tau)
+        kernel = self.kernel
+        mb = _loop_mb(self.mb, self.config.early_stop, max_iters=max_iters)
+        w = window_size(mb.batch_size, mb.tau)
+        # donation: the resume program consumes the carried CenterState
+        # and fit key (the FitCarry buffers) — steady-state partial_fit
+        # chains allocate nothing new per call.  The init program donates
+        # NOTHING: its key/init_idx can be caller-owned buffers (the
+        # legacy shims pass the user's raw key), which callers may reuse.
+        donate = () if kind == "init" else (1, 2)
+
+        def build():
             step = make_step(kernel, mb)
 
             if kind == "init":
-                @jax.jit
                 def run(x, init_idx, key):
                     state0 = init_state(x, init_idx, kernel, w)
                     return run_early_stopped_keyed(
                         mb, sampled_step_with_key(step, x, mb), state0,
                         key)
             else:
-                @jax.jit
                 def run(x, state, key):
                     return run_early_stopped_keyed(
                         mb, sampled_step_with_key(step, x, mb), state, key)
 
-            self._runs[(kind, max_iters)] = run
-        return run
+            return jax.jit(run, donate_argnums=donate)
+
+        return self._program((kind, mb, ("donate",) + donate), build)
 
     def _use_jit(self, sample_weight):
         return (self.config.jit and sample_weight is None
@@ -256,7 +347,8 @@ class SingleExecutor(Executor):
         state, history, out_key = host_fit_loop(
             lambda st, bidx: step(st, x, bidx), x.shape[0], mb, state0,
             fit_key, probs=probs, early_stop=cfg.early_stop,
-            sampler=cfg.sampler, reuse=cfg.reuse, refresh=cfg.refresh)
+            sampler=cfg.sampler, reuse=cfg.reuse, refresh=cfg.refresh,
+            prefetch=cfg.prefetch)
         return FitOutcome(state=state, iters=len(history), history=history,
                           key=out_key, steps=len(history))
 
@@ -278,7 +370,7 @@ class SingleExecutor(Executor):
             lambda st, bidx: step(st, x, bidx), x.shape[0], mb,
             outcome.state, outcome.key, early_stop=cfg.early_stop,
             sampler=cfg.sampler, reuse=cfg.reuse, refresh=cfg.refresh,
-            step0=prev)
+            step0=prev, prefetch=cfg.prefetch)
         return FitOutcome(state=state, iters=len(history), history=history,
                           key=out_key, steps=prev + len(history))
 
@@ -297,35 +389,34 @@ class PrecomputedExecutor(Executor):
 
     name = "single_precomputed"
 
-    def __init__(self, config, mesh=None):
-        super().__init__(config, mesh)
-        self._jit_run_cache = None
-        self._host_step = None
-
     def _jit_run(self):
-        if self._jit_run_cache is None:
-            mb = _loop_mb(self.mb, self.config.early_stop)
-            w = window_size(mb.batch_size, mb.tau)
+        mb = _loop_mb(self.mb, self.config.early_stop)
+        w = window_size(mb.batch_size, mb.tau)
 
-            @jax.jit
+        def build():
             def run(pk, xi, init_idx, key):
                 step = make_step(pk, mb)
                 state0 = init_state(xi, init_idx, pk, w)
                 return run_early_stopped_keyed(
                     mb, sampled_step_with_key(step, xi, mb), state0, key)
 
-            self._jit_run_cache = run
-        return self._jit_run_cache
+            return jax.jit(run)
+
+        # the Gram kernel is a traced ARGUMENT, so the program's closure
+        # is the loop config alone — shareable regardless of kernel size
+        return self._program(("jit_run", mb), build, kernel_free=True)
 
     def _ensure_host_step(self):
-        if self._host_step is None:
-            mb = self.mb
+        mb = self.mb
 
+        def build():
             def hstep(pk, state, xi, bidx):
                 return make_step(pk, mb)(state, xi, bidx)
 
-            self._host_step = jax.jit(hstep, donate_argnums=(1,))
-        return self._host_step
+            return jax.jit(hstep, donate_argnums=(1,))
+
+        return self._program(("host_step", mb, ("donate", 1)), build,
+                             kernel_free=True)
 
     def fit(self, x, key, init_idx=None, center_pts=None,
             sample_weight=None, always_split: bool = True,
@@ -353,7 +444,8 @@ class PrecomputedExecutor(Executor):
         state, history, out_key = host_fit_loop(
             lambda st, bidx: step(pk, st, xi, bidx), x.shape[0], mb,
             state0, fit_key, early_stop=cfg.early_stop,
-            sampler=cfg.sampler, reuse=cfg.reuse, refresh=cfg.refresh)
+            sampler=cfg.sampler, reuse=cfg.reuse, refresh=cfg.refresh,
+            prefetch=cfg.prefetch)
         return FitOutcome(state=state, iters=len(history), history=history,
                           key=out_key, steps=len(history), x_view=xi)
 
@@ -380,15 +472,14 @@ class CachedExecutor(Executor):
                              "sqnorm_mode='recompute' / eval_mode='direct' "
                              "(per-center vmapped kernel evals defeat the "
                              "cache's cond-skip)")
-        self._step = None
 
     def _ensure_step(self):
-        if self._step is None:
-            from repro import cache as cache_lib
-            from repro.cache.tile_cache import warm
+        from repro import cache as cache_lib
+        from repro.cache.tile_cache import warm
 
-            kernel, mb = self.kernel, self.mb
+        kernel, mb = self.kernel, self.mb
 
+        def build():
             def _cached_step(state, cache, xr, xi, batch_idx):
                 # only (state, cache) are donated — the dataset and base
                 # kernel buffers stay owned by the caller
@@ -400,8 +491,12 @@ class CachedExecutor(Executor):
                 st, info = make_step(ck_t, mb)(state, xi, batch_idx)
                 return st, cache, info
 
-            self._step = jax.jit(_cached_step, donate_argnums=(0, 1))
-        return self._step
+            return jax.jit(_cached_step, donate_argnums=(0, 1))
+
+        return self._program(
+            ("cached_step", mb, self.config.cache_tile,
+             self.config.cache_capacity, self.config.cache_dtype,
+             ("donate", 0, 1)), build)
 
     def fit(self, x, key, init_idx=None, center_pts=None,
             sample_weight=None, always_split: bool = True,
@@ -444,7 +539,7 @@ class CachedExecutor(Executor):
         state, history, out_key = host_fit_loop(
             step2, n, mb, state, fit_key,
             early_stop=cfg.early_stop, sampler=cfg.sampler,
-            reuse=cfg.reuse, refresh=cfg.refresh)
+            reuse=cfg.reuse, refresh=cfg.refresh, prefetch=cfg.prefetch)
         return FitOutcome(state=state, iters=len(history), history=history,
                           key=out_key, steps=len(history),
                           cache=ck._replace(cache=cache), x_view=xi)
@@ -479,18 +574,17 @@ class ShardedExecutor(Executor):
         return self.mb if strict else self._mb_eff
 
     def _get_run(self, n_valid, strict: bool):
-        key = (n_valid, strict)
-        run = self._runs.get(key)
-        if run is None:
+        mb = self._mb_for(strict)
+        loop_mb = _loop_mb(mb, self.config.early_stop)
+        cfg = self.config
+
+        def build():
             from repro.core.distributed import make_dist_sampling_step
 
-            mb = self._mb_for(strict)
-            loop_mb = _loop_mb(mb, self.config.early_stop)
             step = make_dist_sampling_step(
-                self.kernel, mb, self.mesh, self.config.data_axes,
-                self.config.model_axis, n_valid=n_valid)
+                self.kernel, mb, self.mesh, cfg.data_axes,
+                cfg.model_axis, n_valid=n_valid)
 
-            @jax.jit
             def run(state, x, key):
                 def step_with_key(st, kb):
                     st, info = step(st, x, kb)
@@ -499,8 +593,13 @@ class ShardedExecutor(Executor):
                 return run_early_stopped(loop_mb, step_with_key, state,
                                          key)
 
-            self._runs[key] = run
-        return run
+            # donate the incoming DistState — it is freshly built and
+            # device_put by fit() on every call, never caller-owned
+            return jax.jit(run, donate_argnums=(0,))
+
+        return self._program(
+            ("dist_run", loop_mb, n_valid, strict, self.mesh,
+             cfg.data_axes, cfg.model_axis, ("donate", 0)), build)
 
     def _resolve_centers(self, x, key, init_idx, center_pts, always_split):
         if center_pts is not None:
@@ -558,13 +657,16 @@ class ShardedExecutor(Executor):
     def fit_stream(self, xb_stream, center_pts, mb=None):
         """Drive the sharded step from an arbitrary host iterator of
         (b, d) batches — the legacy ``fit_distributed`` surface (and
-        ``cluster_hidden_states``)."""
+        ``cluster_hidden_states``).  With ``config.prefetch`` the next
+        batch's host-to-device transfer overlaps the current sharded step
+        (one-deep double buffering; bit-identical results)."""
         from repro.core.distributed import _fit_distributed_impl
 
         cfg = self.config
         return _fit_distributed_impl(
             xb_stream, center_pts, self.kernel, mb or self.mb, self.mesh,
-            cfg.data_axes, cfg.model_axis, early_stop=cfg.early_stop)
+            cfg.data_axes, cfg.model_axis, early_stop=cfg.early_stop,
+            prefetch=cfg.prefetch)
 
     def serving_tuple(self, outcome: FitOutcome, x):
         state = outcome.state                     # DistState: coord windows
@@ -600,7 +702,6 @@ class ShardedCachedExecutor(ShardedExecutor):
                 self.kernel, x_real, mb, self.mesh, self.config.data_axes,
                 self.config.model_axis, n_valid=n_valid)
 
-            @jax.jit
             def run(state, caches, x_idx, key):
                 def step_with_key(carry, kb):
                     st, cc = carry
@@ -611,7 +712,9 @@ class ShardedCachedExecutor(ShardedExecutor):
                     loop_mb, step_with_key, (state, caches), key)
                 return state, caches, iters
 
-            return run
+            # state + caches are the while_loop carry, freshly built per
+            # fit — donate both so the loop reuses their buffers in place
+            return jax.jit(run, donate_argnums=(0, 1))
 
         return _x_keyed_run(self._runs, ("cached", n_valid, strict),
                             x_real, build)

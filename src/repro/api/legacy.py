@@ -24,7 +24,7 @@ def _solver_config(cfg, kernel, **axes) -> SolverConfig:
         sqnorm_mode=cfg.sqnorm_mode, eval_mode=cfg.eval_mode,
         epsilon=cfg.epsilon, max_iters=cfg.max_iters,
         use_pallas=cfg.use_pallas, compute_dtype=cfg.compute_dtype,
-        kernel=kernel, **axes)
+        step=cfg.step, kernel=kernel, **axes)
 
 
 def fit(x, kernel, cfg, key, init="kmeans++", early_stop=True,
@@ -66,11 +66,15 @@ def fit_cached(x, kernel, cfg, key, tile=256, capacity=16,
 def fit_distributed(xb_stream, center_pts, kernel, cfg, mesh,
                     data_axes=("data",), model_axis="model",
                     early_stop=True):
+    # prefetch=False: the shim's contract is behavior-preserving, and the
+    # one-deep pipeline observably advances a CALLER-owned iterator one
+    # extra item on early stop (results are bit-identical either way) —
+    # the estimator surface keeps the pipelined default
     scfg = _solver_config(cfg, kernel, cache="none",
                           distribution="sharded", jit=False,
                           early_stop=early_stop,
                           data_axes=tuple(data_axes),
-                          model_axis=model_axis)
+                          model_axis=model_axis, prefetch=False)
     ex = resolve_plan(scfg, mesh=mesh, solver="sharded").executor
     return ex.fit_stream(xb_stream, center_pts, mb=cfg)
 

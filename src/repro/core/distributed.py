@@ -145,6 +145,9 @@ def _replica_index(mesh: Mesh, data_axes: Sequence[str]) -> jax.Array:
 def _make_local_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
                      data_axes: Sequence[str], model_axis: str):
     """The per-device Algorithm-2 iteration body (runs inside shard_map)."""
+    if cfg.step not in ("composed", "fused"):
+        raise ValueError(f"step={cfg.step!r} (expected 'composed' or "
+                         "'fused')")
     if cfg.sqnorm_mode == "recompute_sharded":
         from repro.core.state import window_size
         w = window_size(cfg.batch_size, cfg.tau)
@@ -158,7 +161,15 @@ def _make_local_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
     b = cfg.batch_size
     data_axes = tuple(data_axes)
 
-    cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else None
+    # index-data kernels carry row ids as data — a precision cast would
+    # corrupt the gather keys, and the streaming slab loop would multiply
+    # cache lookups for values that are gathers; they keep the composed
+    # passes (and full precision) regardless of cfg.step / compute_dtype.
+    from repro.core.kernel_fns import is_index_data
+    index_data = is_index_data(kernel)
+    stream = cfg.step == "fused" and not index_data
+    cdt = jnp.bfloat16 if (cfg.compute_dtype == "bfloat16"
+                           and not index_data) else None
 
     def _c(x):
         """kernel-eval compute dtype cast (bf16 = MXU native; coefficients
@@ -209,8 +220,18 @@ def _make_local_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
 
         # ---- assignment: local batch rows x local centers ------------------
         diag_b = kernel_diag(kernel, xb_loc).astype(jnp.float32)   # (b_loc,)
-        p_loc = p_of(state.pts, state.coef, xb_loc)                # (b_loc,k_loc)
-        d_loc = diag_b[:, None] - 2.0 * p_loc + state.sqnorm[None, :]
+        if stream:
+            # streaming per-shard distances: the (b_loc, k_loc) block is
+            # required by the model-axis gather below, but the
+            # (b_loc, k_loc*W) cross strip never materializes
+            from repro.kernels import ops as kops
+            d_loc = kops.streaming_dists(
+                kernel, xb_loc, state.pts.reshape(k_loc * w, d),
+                state.coef, state.sqnorm, diag_b,
+                precision="bf16" if cdt is not None else "f32")
+        else:
+            p_loc = p_of(state.pts, state.coef, xb_loc)        # (b_loc,k_loc)
+            d_loc = diag_b[:, None] - 2.0 * p_loc + state.sqnorm[None, :]
         d_all = jax.lax.all_gather(d_loc, model_axis, axis=1, tiled=True)
         f_before = _row_mean(jnp.min(d_all, axis=1), w_loc, b_eff)
         assign_loc = jnp.argmin(d_all, axis=1).astype(jnp.int32)   # global ids
@@ -283,6 +304,14 @@ def _make_local_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
                 return coef_row @ (g.astype(jnp.float32) @ coef_row)
 
             new_sqnorm = jax.vmap(sq_one)(rows_k, ids, new_coef)
+        elif stream:
+            # streamed center-chunked recompute (same per-center ops as
+            # the composed branch below — bit-identical): only one
+            # (kc, W, W) Gram slab live per shard instead of the full
+            # (k_loc, W, W) stack
+            from repro.kernels.fused_step import streamed_sqnorm_pts
+            new_sqnorm = streamed_sqnorm_pts(kernel, new_pts, new_coef,
+                                             compute_dtype=cdt)
         else:
             # paper-faithful local Gram per center
             def sq_one(pts_row, coef_row):
@@ -292,9 +321,17 @@ def _make_local_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
             new_sqnorm = jax.vmap(sq_one)(new_pts, new_coef)
 
         # ---- batch objective on new centers (early stopping) ---------------
-        p2 = p_of(new_pts, new_coef, xb_loc)
-        d2 = diag_b[:, None] - 2.0 * p2 + new_sqnorm[None, :]
-        d2_min = jax.lax.pmin(jnp.min(d2, axis=1), model_axis)     # (b_loc,)
+        if stream:
+            from repro.kernels import ops as kops
+            best2 = kops.streaming_min(
+                kernel, xb_loc, new_pts.reshape(k_loc * w, d), new_coef,
+                new_sqnorm, diag_b,
+                precision="bf16" if cdt is not None else "f32")
+        else:
+            p2 = p_of(new_pts, new_coef, xb_loc)
+            d2 = diag_b[:, None] - 2.0 * p2 + new_sqnorm[None, :]
+            best2 = jnp.min(d2, axis=1)
+        d2_min = jax.lax.pmin(best2, model_axis)                   # (b_loc,)
         f_after = _row_mean(d2_min, w_loc, b_eff)
 
         new_state = DistState(pts=new_pts, coef=new_coef, head=new_head,
@@ -425,9 +462,19 @@ def _fit_distributed_impl(xb_stream, center_pts: jax.Array,
                           kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
                           data_axes: Sequence[str] = ("data",),
                           model_axis: str = "model",
-                          early_stop: bool = True):
+                          early_stop: bool = True,
+                          prefetch: bool = False):
     """Stream-driven sharded fit loop (shared by the ``sharded`` host plan
-    and :func:`cluster_hidden_states`)."""
+    and :func:`cluster_hidden_states`).
+
+    ``prefetch``: one-deep double buffering — the NEXT batch is pulled
+    from the host iterator and its ``device_put`` transfer issued right
+    after step i is dispatched, before the loop blocks on step i's
+    improvement, so host-to-device transfer overlaps the sharded step
+    (the ROADMAP async-prefetch item).  The step consumes the same batch
+    values in the same order, so results are bit-identical to the
+    blocking path (tested); the only observable difference is that an
+    early stop may have consumed one extra item from the iterator."""
     from repro.core.state import window_size
 
     w = window_size(cfg.batch_size, cfg.tau)
@@ -439,11 +486,32 @@ def _fit_distributed_impl(xb_stream, center_pts: jax.Array,
     xspec = NamedSharding(mesh, P(tuple(data_axes), None))
 
     history = []
-    for i, xb in enumerate(xb_stream):
-        if i >= cfg.max_iters:
+    if not prefetch:
+        for i, xb in enumerate(xb_stream):
+            if i >= cfg.max_iters:
+                break
+            state, info = step(state, jax.device_put(xb, xspec))
+            imp = float(info.improvement)
+            history.append(dict(step=i, f_before=float(info.f_before),
+                                f_after=float(info.f_after),
+                                improvement=imp))
+            if early_stop and imp < cfg.epsilon:
+                break
+        return state, history
+
+    it = iter(xb_stream)
+    nxt = next(it, None)
+    cur = jax.device_put(nxt, xspec) if nxt is not None else None
+    for i in range(cfg.max_iters):
+        if cur is None:
             break
-        state, info = step(state, jax.device_put(xb, xspec))
-        imp = float(info.improvement)
+        state, info = step(state, cur)        # async dispatch
+        cur = None
+        if i + 1 < cfg.max_iters:
+            nxt = next(it, None)              # overlaps the device step
+            if nxt is not None:
+                cur = jax.device_put(nxt, xspec)
+        imp = float(info.improvement)         # host sync point
         history.append(dict(step=i, f_before=float(info.f_before),
                             f_after=float(info.f_after), improvement=imp))
         if early_stop and imp < cfg.epsilon:

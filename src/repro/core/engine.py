@@ -24,6 +24,7 @@ compiled program across fits of same-shaped data).
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -357,6 +358,11 @@ def make_fused_restart_run(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
             out_specs=(st_win, P(), P(), P()),
             check_rep=False)
 
+        # NOTE: state0 is deliberately NOT donated — only the winning
+        # lane's (k, ...) state leaves the program, so the stacked
+        # (R, k, ...) input can never alias an output and XLA would
+        # reject the donation (the while_loop reuses the carry buffers
+        # internally regardless)
         @jax.jit
         def run(state0, x, xe, fit_keys):
             win, objs, iters, best = fn(state0, x, xe, fit_keys)
@@ -386,7 +392,11 @@ def make_fused_restart_run(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
         out_specs=(st_win, cache_specs, P(), P(), P()),
         check_rep=False)
 
-    @jax.jit
+    # the per-(restart, shard) tile caches round-trip the program with
+    # identical shapes — donate them so the whole cache store updates in
+    # place (state0 is not donatable: only the winner's (k, ...) slice
+    # leaves, see the uncached variant above)
+    @functools.partial(jax.jit, donate_argnums=(1,))
     def run(state0, caches0, x_idx, xe, fit_keys):
         win, caches, objs, iters, best = fn(state0, caches0, x_idx, xe,
                                             fit_keys)

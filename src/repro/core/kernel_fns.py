@@ -157,14 +157,18 @@ def gram_rows_fn(k: "KernelFn"):
     return _EXT_ROWS.get(type(k))
 
 
-def _sq_dists(x: jax.Array, y: jax.Array) -> jax.Array:
+def _sq_dists(x: jax.Array, y: jax.Array, yy=None) -> jax.Array:
     """Pairwise squared Euclidean distances, (m, d) x (n, d) -> (m, n).
 
     Uses the |x|^2 + |y|^2 - 2 x.y expansion so the inner term is a single
-    MXU matmul.  Clamped at zero against round-off.
+    MXU matmul.  Clamped at zero against round-off.  ``yy``: optionally
+    precomputed ``sum(y*y)[None, :]`` — :func:`cross_fixed_y` hoists it
+    out of chunk scans; same ops on the same data, so results are
+    bit-identical to passing None.
     """
     xx = jnp.sum(x * x, axis=-1)[:, None]
-    yy = jnp.sum(y * y, axis=-1)[None, :]
+    if yy is None:
+        yy = jnp.sum(y * y, axis=-1)[None, :]
     xy = x @ y.T
     return jnp.maximum(xx + yy - 2.0 * xy, 0.0)
 
@@ -226,6 +230,31 @@ def diag_of(k: KernelFn, x: jax.Array) -> jax.Array:
     if diag_is_one(k):
         return jnp.ones(x.shape[0], x.dtype)
     return kernel_diag(k, x)
+
+
+def is_index_data(k: KernelFn) -> bool:
+    """Static: does this kernel consume (n, 1) row-INDEX data instead of
+    coordinates?  True for :class:`Precomputed` and for extension kernels
+    advertising the ``gram_rows`` capability (the cached kernels) — their
+    data rows are gather keys, so precision casts must never touch them
+    (``repro.kernels.fused_step`` gates its bf16 coordinate cast on
+    this)."""
+    return isinstance(k, Precomputed) or type(k) in _EXT_ROWS
+
+
+def cross_fixed_y(k: KernelFn, y: jax.Array):
+    """``cross(x) == kernel_cross(k, x, y)`` with the y-side invariants
+    hoisted: the chunked serving scans (``minibatch.assign_chunked`` /
+    ``center_distances_chunked``) evaluate many query chunks against ONE
+    fixed support set, so recomputing the support squared norms inside
+    every chunk is pure waste.  For kernels with no y-side statistic this
+    is a plain closure over ``kernel_cross``.  The hoisted values are the
+    same ops on the same data, so results are bit-identical to the
+    unhoisted path."""
+    if isinstance(k, Gaussian):
+        yy = jnp.sum(y * y, axis=-1)[None, :]
+        return lambda x: jnp.exp(-_sq_dists(x, y, yy=yy) / k.kappa)
+    return lambda x: kernel_cross(k, x, y)
 
 
 def gamma_of(k: KernelFn, x: jax.Array) -> jax.Array:

@@ -45,6 +45,9 @@ class MBConfig(NamedTuple):
     max_iters: int = 200
     use_pallas: bool = False        # fused_assign Pallas kernel for step 2
     compute_dtype: str = "float32"  # 'bfloat16': MXU-native kernel evals
+    step: str = "composed"          # 'fused': streaming one-pass step
+    #   (repro.kernels.fused_step; online argmin, no (b, kW) strip in HBM;
+    #   bit-identical to 'composed' at f32 — see docs/perf.md)
 
 
 class StepInfo(NamedTuple):
@@ -57,8 +60,12 @@ class StepInfo(NamedTuple):
 
 def _batch_center_dots(kernel: KernelFn, xb: jax.Array, x: jax.Array,
                        idx: jax.Array, coef: jax.Array,
-                       use_pallas: bool) -> jax.Array:
-    """P[x, j] = <phi(x), C_j> for batch xb against windowed centers."""
+                       use_pallas: bool, cdt=None) -> jax.Array:
+    """P[x, j] = <phi(x), C_j> for batch xb against windowed centers.
+
+    ``cdt``: optional kernel-eval compute dtype for the COORDINATES (the
+    ``precision="bf16"`` axis); the coefficient contraction stays f32.
+    None (the default) emits the historical program unchanged."""
     k, w = idx.shape
     if use_pallas:
         from repro.kernels import ops as kops
@@ -69,10 +76,16 @@ def _batch_center_dots(kernel: KernelFn, xb: jax.Array, x: jax.Array,
             # the support-column gather with the coefficient contraction —
             # zero kernel evaluations for resident rows.
             return kops.cached_assign_dots(rows_fn(kernel, xb), idx, coef)
-        return kops.fused_batch_center_dots(kernel, xb, x[idx.reshape(-1)],
-                                            coef)
+        xbc = xb if cdt is None else xb.astype(cdt)
+        sup = x[idx.reshape(-1)]
+        return kops.fused_batch_center_dots(
+            kernel, xbc, sup if cdt is None else sup.astype(cdt), coef)
     sup = x[idx.reshape(-1)]                      # (k*W, d)
-    cross = kernel_cross(kernel, xb, sup)         # (b, k*W)
+    if cdt is not None:
+        cross = kernel_cross(kernel, xb.astype(cdt), sup.astype(cdt)) \
+            .astype(jnp.float32)
+    else:
+        cross = kernel_cross(kernel, xb, sup)     # (b, k*W)
     return jnp.einsum("bkw,kw->bk", cross.reshape(xb.shape[0], k, w), coef)
 
 
@@ -101,7 +114,7 @@ def _append_to_windows(idx, coef, head, alpha, bj, onehot, batch_idx):
     return jax.vmap(one_center)(idx, coef, head, alpha, bj, mask)
 
 
-def _sqnorm_recompute(kernel, x, idx, coef):
+def _sqnorm_recompute(kernel, x, idx, coef, cdt=None):
     """Paper-faithful <C_j, C_j>: per-center W x W Gram quadratic form.
     Empty slots (coef 0) contribute nothing.
 
@@ -109,7 +122,10 @@ def _sqnorm_recompute(kernel, x, idx, coef):
     resolve all k*W support rows in ONE lookup outside the vmap and gather
     the per-center W x W blocks inside it — a cached lookup placed under
     the per-center vmap would lower its ``lax.cond`` to ``select`` and run
-    the miss branch (a full strip recompute) on every hit."""
+    the miss branch (a full strip recompute) on every hit.
+
+    ``cdt``: optional compute dtype for the Gram COORDINATES (the fused
+    step's bf16 mode); coefficients and the quadratic form stay f32."""
     rows_fn = gram_rows_fn(kernel)
     if rows_fn is not None:
         k, w = idx.shape
@@ -124,18 +140,145 @@ def _sqnorm_recompute(kernel, x, idx, coef):
 
     def one(idx_row, coef_row):
         pts = x[idx_row]                                           # (W, d)
+        if cdt is not None:
+            pts = pts.astype(cdt)
         g = kernel_cross(kernel, pts, pts)                         # (W, W)
+        if cdt is not None:
+            g = g.astype(jnp.float32)
         return coef_row @ (g @ coef_row)
 
     return jax.vmap(one)(idx, coef)
 
 
+def _make_fused_step(kernel: KernelFn, cfg: MBConfig):
+    """The `step="fused"` Algorithm-2 iteration: both batch x window
+    passes (assignment and the post-update objective) run through the
+    streaming fused kernels (:mod:`repro.kernels.fused_step`) — online
+    argmin carries instead of a materialized (b, k*W) cross strip or
+    (b, k) distance matrix.  The O(k b) bookkeeping (rates, ring append)
+    and the O(k W^2) sqnorm recompute are shared verbatim with the
+    composed step, so at f32 the trajectories are BIT-IDENTICAL
+    (tests/test_api_grid.py pins this across the plan grid).
+
+    ``compute_dtype='bfloat16'`` (SolverConfig ``precision="bf16"``)
+    casts kernel-eval coordinates to bf16; contractions, argmin carries
+    and all state stay f32."""
+    from repro.kernels import ops as kops
+
+    if cfg.sqnorm_mode != "recompute" or cfg.eval_mode != "direct":
+        raise ValueError(
+            "step='fused' streams both batch x window passes, which "
+            "exist only under the paper-faithful sqnorm_mode='recompute'"
+            " / eval_mode='direct' (the incremental/delta variants need "
+            "the materialized per-center dots the fused step never "
+            "forms); use step='composed'")
+    from repro.core.kernel_fns import is_index_data
+
+    rate_fn = get_rate(cfg.rate)
+    b = cfg.batch_size
+    # index-data kernels (Precomputed / cached): never cast — their data
+    # rows are gather KEYS, and their kernel values are cache/Gram
+    # gathers, so the streaming slab loop would also just multiply
+    # lookups with zero memory win.  They take the composed passes below.
+    index_data = is_index_data(kernel)
+    precision = "bf16" if (cfg.compute_dtype == "bfloat16"
+                           and not index_data) else "f32"
+    cdt = jnp.bfloat16 if precision == "bf16" else None
+
+    def step(state: CenterState, x: jax.Array, batch_idx: jax.Array):
+        k, w = state.idx.shape
+        xb = x[batch_idx]                                          # (b, d)
+        diag_b = diag_of(kernel, xb)                              # (b,)
+
+        # ---- (2) streaming assignment: online argmin over centers ---------
+        if index_data:
+            # cached/precomputed: ONE bulk row resolve (the composed
+            # dots), then min/argmin — per-slab lookups would re-run the
+            # cache's key scan k/kc times for values that are gathers
+            p = _batch_center_dots(kernel, xb, x, state.idx, state.coef,
+                                   cfg.use_pallas)
+            dists = diag_b[:, None] - 2.0 * p + state.sqnorm[None, :]
+            best = jnp.min(dists, axis=1)
+            assign = jnp.argmin(dists, axis=1).astype(jnp.int32)
+        else:
+            best, assign = kops.streaming_assign(
+                kernel, xb, x[state.idx.reshape(-1)], state.coef,
+                state.sqnorm, diag_b, precision=precision)
+        f_before = jnp.mean(best)
+        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)      # (b, k)
+        bj = jnp.sum(onehot, axis=0)                               # (k,)
+
+        # ---- (3)/(4) rates + ring append: shared with the composed step ---
+        alpha = rate_fn(bj, state.counts, b)                       # (k,)
+        coef_scaled = state.coef * (1.0 - alpha)[:, None]
+        new_idx, new_coef, new_head, _, _ = _append_to_windows(
+            state.idx, coef_scaled, state.head, alpha, bj, onehot,
+            batch_idx)
+
+        # ---- (5) center squared norms (paper-faithful recompute) ----------
+        # streamed center-chunked recompute: the (k, W, W) Gram stack is
+        # the step's LARGEST buffer — streaming it is most of the fused
+        # step's peak-memory win.  Index-data kernels keep the composed
+        # bulk-lookup recompute: one row resolve beats k/kc chunked
+        # resolves, and their Gram values are gathers anyway.
+        if index_data:
+            new_sqnorm = _sqnorm_recompute(kernel, x, new_idx, new_coef)
+        else:
+            from repro.kernels.fused_step import streamed_sqnorm
+            new_sqnorm = streamed_sqnorm(kernel, x, new_idx, new_coef,
+                                         compute_dtype=cdt)
+
+        # ---- (6) streaming objective on the NEW centers -------------------
+        if index_data:
+            p_new = _batch_center_dots(kernel, xb, x, new_idx, new_coef,
+                                       cfg.use_pallas)
+            d_new = diag_b[:, None] - 2.0 * p_new + new_sqnorm[None, :]
+            best2 = jnp.min(d_new, axis=1)
+        else:
+            best2 = kops.streaming_min(
+                kernel, xb, x[new_idx.reshape(-1)], new_coef, new_sqnorm,
+                diag_b, precision=precision)
+        f_after = jnp.mean(best2)
+
+        new_state = CenterState(
+            idx=new_idx, coef=new_coef, head=new_head, sqnorm=new_sqnorm,
+            counts=state.counts + bj, step=state.step + 1)
+        info = StepInfo(f_before=f_before, f_after=f_after,
+                        improvement=f_before - f_after,
+                        batch_counts=bj, assignments=assign)
+        return new_state, info
+
+    return step
+
+
 def make_step(kernel: KernelFn, cfg: MBConfig):
     """Returns step(state, x, batch_idx) -> (state, StepInfo): one Algorithm-2
     iteration.  Pure; jit/shard_map-able; x passed explicitly (never a baked
-    constant)."""
+    constant).  ``cfg.step`` selects the implementation: 'composed' (the
+    historical op chain below) or 'fused' (:func:`_make_fused_step` —
+    streaming passes, bit-identical at f32)."""
+    if cfg.step == "fused":
+        return _make_fused_step(kernel, cfg)
+    if cfg.step != "composed":
+        raise ValueError(f"step={cfg.step!r} (expected 'composed' or "
+                         "'fused')")
     rate_fn = get_rate(cfg.rate)
     b = cfg.batch_size
+    # kernel-eval compute dtype (SolverConfig precision="bf16"): cast the
+    # COORDINATES entering kernel evaluations, accumulate in f32 — the
+    # same convention as the sharded local step's _c.  Index-data kernels
+    # carry row ids as data, which a cast would corrupt; they always
+    # evaluate at full precision.  float32 (the default) is the identity:
+    # the emitted program is unchanged.
+    from repro.core.kernel_fns import is_index_data
+    cdt = jnp.bfloat16 if (cfg.compute_dtype == "bfloat16"
+                           and not is_index_data(kernel)) else None
+
+    def _c(v):
+        return v.astype(cdt) if cdt is not None else v
+
+    def _f32(v):
+        return v.astype(jnp.float32) if cdt is not None else v
 
     def step(state: CenterState, x: jax.Array, batch_idx: jax.Array):
         k, w = state.idx.shape
@@ -144,7 +287,7 @@ def make_step(kernel: KernelFn, cfg: MBConfig):
 
         # ---- (2) assignment against current truncated centers -------------
         p = _batch_center_dots(kernel, xb, x, state.idx, state.coef,
-                               cfg.use_pallas)                     # (b, k)
+                               cfg.use_pallas, cdt=cdt)            # (b, k)
         dists = diag_b[:, None] - 2.0 * p + state.sqnorm[None, :]
         f_before = jnp.mean(jnp.min(dists, axis=1))
         assign = jnp.argmin(dists, axis=1).astype(jnp.int32)
@@ -163,12 +306,13 @@ def make_step(kernel: KernelFn, cfg: MBConfig):
         # ---- (5) center squared norms --------------------------------------
         onehot_n = onehot / jnp.maximum(bj, 1.0)[None, :]          # (b, k)
         if cfg.sqnorm_mode == "recompute":
-            new_sqnorm = _sqnorm_recompute(kernel, x, new_idx, new_coef)
+            new_sqnorm = _sqnorm_recompute(kernel, x, new_idx, new_coef,
+                                           cdt=cdt)
             kbb = None
         elif cfg.sqnorm_mode == "incremental":
             # <C', C'> for the *untruncated* update, then subtract the
             # evicted component D:  <C-D, C-D> = <C,C> - 2<C-D, D> - <D,D>.
-            kbb = kernel_cross(kernel, xb, xb)                     # (b, b)
+            kbb = _f32(kernel_cross(kernel, _c(xb), _c(xb)))       # (b, b)
             cm_cross = jnp.sum(onehot * p, axis=0) / jnp.maximum(bj, 1.0)
             cm_sq = jnp.sum(onehot_n * (kbb @ onehot_n), axis=0)   # (k,)
             sq_untrunc = (decay ** 2 * state.sqnorm
@@ -176,9 +320,11 @@ def make_step(kernel: KernelFn, cfg: MBConfig):
                           + alpha ** 2 * cm_sq)
 
             def corr(evict_i, evict_c, idx_row, coef_row):
-                kd_w = kernel_cross(kernel, x[evict_i], x[idx_row])  # (b, W)
+                kd_w = _f32(kernel_cross(kernel, _c(x[evict_i]),
+                                         _c(x[idx_row])))            # (b, W)
                 c_d_new = evict_c @ (kd_w @ coef_row)     # <D, C_trunc>
-                kdd = kernel_cross(kernel, x[evict_i], x[evict_i])
+                kdd = _f32(kernel_cross(kernel, _c(x[evict_i]),
+                                        _c(x[evict_i])))
                 dd = evict_c @ (kdd @ evict_c)            # <D, D>
                 return 2.0 * c_d_new + dd
 
@@ -190,16 +336,17 @@ def make_step(kernel: KernelFn, cfg: MBConfig):
         # ---- (6) batch objective on the NEW centers (early stopping) ------
         if cfg.eval_mode == "direct":
             p_new = _batch_center_dots(kernel, xb, x, new_idx, new_coef,
-                                       cfg.use_pallas)
+                                       cfg.use_pallas, cdt=cdt)
         elif cfg.eval_mode == "delta":
             # <phi(x), C'_j> = decay_j P[x,j] + alpha_j <phi(x), cm(B_j)>
             #                  - <phi(x), D_j>           — O(k b^2), no kW pass
             if kbb is None:
-                kbb = kernel_cross(kernel, xb, xb)
+                kbb = _f32(kernel_cross(kernel, _c(xb), _c(xb)))
             cm_dot = kbb @ onehot_n                                # (b, k)
 
             def drop_dot(evict_i, evict_c):
-                return kernel_cross(kernel, xb, x[evict_i]) @ evict_c  # (b,)
+                return _f32(kernel_cross(kernel, _c(xb),
+                                         _c(x[evict_i]))) @ evict_c  # (b,)
 
             d_dot = jax.vmap(drop_dot)(evict_idx, evict_coef).T    # (b, k)
             p_new = decay[None, :] * p + alpha[None, :] * cm_dot - d_dot
@@ -298,7 +445,8 @@ def sample_batch_nested(key: jax.Array, step, n: int, b: int,
 def host_fit_loop(step, n: int, cfg: MBConfig, state, key: jax.Array,
                   probs: Optional[jax.Array] = None,
                   early_stop: bool = True, sampler: str = "iid",
-                  reuse: float = 0.5, refresh: int = 8, step0: int = 0):
+                  reuse: float = 0.5, refresh: int = 8, step0: int = 0,
+                  prefetch: bool = False):
     """The host-driven early-stopped driver shared by every non-jit fit
     path (plain / weighted / cached): per iteration draw the batch indices
     from the unified key stream (:mod:`repro.api.keys`), apply
@@ -310,24 +458,46 @@ def host_fit_loop(step, n: int, cfg: MBConfig, state, key: jax.Array,
     the stream untouched.  ``step0`` offsets the iteration counter so
     ``partial_fit`` resumption continues both the nested schedule and the
     history numbering.  Returns ``(state, history, key)`` — the carried key
-    resumes the stream exactly (``KernelKMeans.partial_fit``)."""
+    resumes the stream exactly (``KernelKMeans.partial_fit``).
+
+    ``prefetch``: one-deep pipeline — draw (and ``device_put``) iteration
+    i+1's batch indices after DISPATCHING step i but before blocking on
+    its improvement, so sampling/transfer overlaps the device step.  The
+    drawn values, the visited key stream and the returned carry key are
+    identical to the blocking path (an early stop discards the prefetched
+    draw without consuming its key advance) — results are bit-identical
+    either way (tested)."""
     if sampler not in ("iid", "nested"):
         raise ValueError(sampler)
     if sampler == "nested" and probs is not None:
         raise NotImplementedError("the nested sampler draws unweighted "
                                   "batches; sample weights need "
                                   "sampler='iid'")
-    history = []
-    for i in range(step0, step0 + cfg.max_iters):
+
+    def draw(key, i):
+        """-> (key', bidx): one batch draw at cursor i.  'nested' draws
+        are pure functions of (key, i) and leave the stream untouched."""
         if sampler == "iid":
             key, kb = api_keys.next_batch_key(key)
-            bidx = (sample_batch(kb, n, cfg.batch_size) if probs is None
-                    else sample_batch_weighted(kb, probs, cfg.batch_size))
-        else:
-            bidx = sample_batch_nested(key, i, n, cfg.batch_size,
-                                       reuse=reuse, refresh=refresh)
-        state, info = step(state, bidx)
-        imp = float(info.improvement)
+            return key, (sample_batch(kb, n, cfg.batch_size)
+                         if probs is None
+                         else sample_batch_weighted(kb, probs,
+                                                    cfg.batch_size))
+        return key, sample_batch_nested(key, i, n, cfg.batch_size,
+                                        reuse=reuse, refresh=refresh)
+
+    history = []
+    end = step0 + cfg.max_iters
+    pending = None
+    for i in range(step0, end):
+        key_next, bidx = pending if pending is not None else draw(key, i)
+        pending = None
+        state, info = step(state, bidx)       # async dispatch
+        if prefetch and i + 1 < end:
+            knx, bnx = draw(key_next, i + 1)  # overlaps the device step
+            pending = (knx, jax.device_put(bnx))
+        imp = float(info.improvement)         # host sync point
+        key = key_next
         history.append(dict(step=i, f_before=float(info.f_before),
                             f_after=float(info.f_after), improvement=imp))
         if early_stop and imp < cfg.epsilon:
@@ -466,11 +636,22 @@ def assign_chunked(kernel: KernelFn, coef: jax.Array, sqnorm: jax.Array,
     """Chunked nearest-center assignment against explicit (k*W, d) support
     points — the single serving kernel, shared by ``predict`` and the
     sharded ``distributed.predict_distributed`` body so their numerics can
-    never diverge."""
+    never diverge.
+
+    Support-side invariants (the (k*W,) support squared norms of the
+    Gaussian) are hoisted OUT of the chunk scan via
+    :func:`repro.core.kernel_fns.cross_fixed_y` — they are fixed across
+    every chunk, and recomputing them per chunk cost O(kWd) per chunk for
+    nothing; the query side already uses the :func:`diag_of`
+    normalized-kernel fast path.  Hoisting reuses the same ops on the same
+    data, so labels are unchanged bit-for-bit."""
+    from repro.core.kernel_fns import cross_fixed_y
+
     k, w = coef.shape
+    cross_fn = cross_fixed_y(kernel, sup)     # sup stats computed ONCE
 
     def one_chunk(xc):
-        cross = kernel_cross(kernel, xc, sup).reshape(xc.shape[0], k, w)
+        cross = cross_fn(xc).reshape(xc.shape[0], k, w)
         p = jnp.einsum("bkw,kw->bk", cross, coef)
         d = diag_of(kernel, xc)[:, None] - 2.0 * p + sqnorm[None, :]
         return jnp.argmin(d, axis=1).astype(jnp.int32)
@@ -488,11 +669,14 @@ def center_distances_chunked(kernel: KernelFn, coef: jax.Array,
     """Chunked feature-space distances d(x, C_j) against explicit (k*W, d)
     support points, (nq, k) — the ``KernelKMeans.transform`` / ``score``
     kernel.  Same distance expression as :func:`assign_chunked` (which only
-    keeps the argmin)."""
+    keeps the argmin), with the same support-invariant hoist."""
+    from repro.core.kernel_fns import cross_fixed_y
+
     k, w = coef.shape
+    cross_fn = cross_fixed_y(kernel, sup)     # sup stats computed ONCE
 
     def one_chunk(xc):
-        cross = kernel_cross(kernel, xc, sup).reshape(xc.shape[0], k, w)
+        cross = cross_fn(xc).reshape(xc.shape[0], k, w)
         p = jnp.einsum("bkw,kw->bk", cross, coef)
         return diag_of(kernel, xc)[:, None] - 2.0 * p + sqnorm[None, :]
 

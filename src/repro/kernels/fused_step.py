@@ -1,0 +1,358 @@
+"""Streaming fused mini-batch step kernels (the `step="fused"` impl).
+
+The composed Algorithm-2 step materializes the (b, k*W) batch x window
+cross-kernel strip AND the (b, k) distance matrix in f32 HBM between
+kernel launches, so per-step wall clock is bandwidth-bound.  The fused
+step streams support tiles through on-chip memory and keeps only
+flash-attention-style ONLINE ARGMIN carries — a running best distance and
+best center index per batch row — so neither strip ever exists off-chip.
+
+Two implementations, dispatched by :mod:`repro.kernels.ops`:
+
+* ``streaming_assign_pallas`` — the Pallas TPU kernel.  Grid
+  ``(b/bt, k, W/st)``: the innermost axis streams (st, d) support tiles
+  of one center's window through VMEM, accumulating the coefficient
+  contraction into a (bt, 1) VMEM scratch; at the last window tile the
+  center's distances fold into the resident best/argmin output blocks.
+  VMEM working set per step: bt*d + st*d + bt*st + O(bt) floats — the
+  (b, k*W) strip and (b, k) distances never touch HBM.  Mixed precision:
+  ``precision="bf16"`` casts the coordinate tiles to bfloat16 before the
+  MXU matmul; the cross products, kernel elementwise math, coefficient
+  contraction and argmin carries all stay f32 (the Schwartzman'23 regime:
+  low-precision evals, full-precision accumulation).
+
+* ``streaming_assign_xla`` / ``streaming_dists_xla`` /
+  ``streaming_min_xla`` — the structural XLA fallback used on non-TPU
+  backends (and for kernels without an MXU form, e.g. Laplacian or the
+  index-data cached kernels).  An UNROLLED loop over center chunks runs
+  exactly the composed path's per-chunk ops (same ``kernel_cross`` +
+  einsum + distance expression) and folds each chunk into the running
+  best/argmin.  Because every chunk repeats the composed arithmetic on a
+  >= 2-center slab (1-center slabs change XLA's gemm lowering), the
+  result is BIT-IDENTICAL to the composed step at f32 — the equivalence
+  the grid sweep in tests/test_api_grid.py pins — while never holding
+  more than one (b, kc*W) slab live.
+
+Tile defaults and the per-backend tuning story live in docs/perf.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.kernel_fns import KernelFn, is_index_data, kernel_cross
+from repro.kernels.fused_assign import _apply_kernel
+
+# Center-chunk width of the XLA fallback: one (b, kc*W) slab live at a
+# time.  Chunks are never narrower than 2 centers — XLA lowers a
+# single-center (b, W) gemm differently from a k-center slab, which would
+# break bit-identity with the composed path (measured, not hypothetical).
+STREAM_CHUNK = 8
+_MIN_CHUNK = 2
+
+
+def center_chunks(k: int, kc: int = STREAM_CHUNK):
+    """Static (start, width) chunking of k centers with no width-1 chunk
+    (a trailing remainder of 1 is merged into the previous chunk)."""
+    kc = max(kc, _MIN_CHUNK)
+    if k <= kc:
+        return [(0, k)]
+    chunks = []
+    j0 = 0
+    while j0 < k:
+        kk = min(kc, k - j0)
+        if k - (j0 + kk) == 1:          # never leave a width-1 remainder
+            kk += 1
+        chunks.append((j0, kk))
+        j0 += kk
+    return chunks
+
+
+def _precision_cast(kernel: KernelFn, precision: str):
+    """Coordinate cast applied before kernel evaluation.  bf16 only ever
+    touches COORDINATES: index-data kernels (Precomputed / CachedKernel)
+    carry row ids as data, which a cast would corrupt, so they always
+    evaluate at full precision."""
+    if precision in ("f32", "float32") or is_index_data(kernel):
+        return lambda a: a
+    if precision in ("bf16", "bfloat16"):
+        return lambda a: a.astype(jnp.bfloat16)
+    raise ValueError(f"precision={precision!r} (expected 'f32' or 'bf16')")
+
+
+_HAS_BARRIER = None     # tri-state: unprobed / usable / unusable
+
+
+def _register_barrier_batching() -> bool:
+    """jax 0.4.x ships no vmap batching rule for ``optimization_barrier``
+    — but the multi-restart engine vmaps the whole step, so the slab
+    loop's barriers would make ``restarts>1`` untraceable.  The barrier
+    is elementwise identity, so its batching rule is the trivial
+    passthrough; register it (idempotently) and fall back to no barriers
+    at all if the private registry moves in a future jax.  Called
+    LAZILY from the first fused-step trace, never at import — importing
+    repro.kernels must not mutate jax process globals for programs that
+    never run the fused step."""
+    try:
+        from jax._src.interpreters import batching
+        from jax._src.lax import lax as lax_internal
+
+        prim = lax_internal.optimization_barrier_p
+        if prim not in batching.primitive_batchers:
+            batching.primitive_batchers[prim] = \
+                lambda args, dims: (prim.bind(*args), dims)
+        return True
+    except Exception:                                   # pragma: no cover
+        import warnings
+
+        warnings.warn(
+            "repro.kernels.fused_step: could not make "
+            "lax.optimization_barrier vmap-safe on this jax; the fused "
+            "step stays numerically exact but loses its slab-scheduling "
+            "hint (peak memory may match the composed step)",
+            RuntimeWarning, stacklevel=3)
+        return False
+
+
+def _soft_barrier(args):
+    """``lax.optimization_barrier``: sequences the slab loop so XLA's
+    scheduler cannot hoist every slab's gemm ahead of the running-min
+    chain (which would re-materialize the full strip and erase the
+    streaming memory win).  Identity on VALUES — bit-identity with the
+    composed path is untouched; on a jax whose barrier cannot be made
+    vmap-safe it degrades to a plain identity (scheduling hint lost,
+    numerics unchanged, one-time warning)."""
+    global _HAS_BARRIER
+    if _HAS_BARRIER is None:
+        _HAS_BARRIER = _register_barrier_batching()
+    if not _HAS_BARRIER:                                # pragma: no cover
+        return args
+    return jax.lax.optimization_barrier(args)
+
+
+def _chunk_dists(kernel, cast, xb, sup, coef, sqnorm, diag_b, j0, kk):
+    """The composed path's distance block for centers [j0, j0+kk): the
+    exact op sequence of ``minibatch._batch_center_dots`` + the distance
+    expression, restricted to a center slab."""
+    b = xb.shape[0]
+    k, w = coef.shape
+    sup_c = sup.reshape(k, w, sup.shape[-1])[j0:j0 + kk].reshape(kk * w, -1)
+    cross = kernel_cross(kernel, cast(xb), cast(sup_c)).astype(jnp.float32)
+    p = jnp.einsum("bkw,kw->bk", cross.reshape(b, kk, w), coef[j0:j0 + kk])
+    return diag_b[:, None] - 2.0 * p + sqnorm[None, j0:j0 + kk]
+
+
+def streaming_assign_xla(kernel: KernelFn, xb: jax.Array, sup: jax.Array,
+                         coef: jax.Array, sqnorm: jax.Array,
+                         diag_b: jax.Array, *, kc: int = STREAM_CHUNK,
+                         precision: str = "f32"):
+    """(best, assign): running min distance (b,) f32 and argmin center
+    (b,) int32 over all k centers, one (b, kc*W) slab at a time.
+
+    ``lax.optimization_barrier`` threads the batch through the carry
+    between slabs: without it XLA's scheduler hoists every slab's gemm
+    ahead of the min chain (the slabs have no data dependence on each
+    other), which re-materializes the full strip and erases the streaming
+    memory win.  The barrier is identity on values, so bit-identity with
+    the composed path is untouched."""
+    k, _ = coef.shape
+    cast = _precision_cast(kernel, precision)
+    best = bidx = None
+    for j0, kk in center_chunks(k, kc):
+        dd = _chunk_dists(kernel, cast, xb, sup, coef, sqnorm, diag_b,
+                          j0, kk)
+        cmin = jnp.min(dd, axis=1)
+        cidx = jnp.argmin(dd, axis=1).astype(jnp.int32) + j0
+        if best is None:
+            best, bidx = cmin, cidx
+        else:
+            upd = cmin < best                  # strict: first-min ties,
+            best = jnp.where(upd, cmin, best)  # same as jnp.argmin's
+            bidx = jnp.where(upd, cidx, bidx)
+        best, bidx, xb = _soft_barrier((best, bidx, xb))
+    return best, bidx
+
+
+def streaming_min_xla(kernel: KernelFn, xb: jax.Array, sup: jax.Array,
+                      coef: jax.Array, sqnorm: jax.Array,
+                      diag_b: jax.Array, *, kc: int = STREAM_CHUNK,
+                      precision: str = "f32") -> jax.Array:
+    """Running min distance only — the post-update objective pass."""
+    k, _ = coef.shape
+    cast = _precision_cast(kernel, precision)
+    best = None
+    for j0, kk in center_chunks(k, kc):
+        dd = _chunk_dists(kernel, cast, xb, sup, coef, sqnorm, diag_b,
+                          j0, kk)
+        cmin = jnp.min(dd, axis=1)
+        best = cmin if best is None else jnp.minimum(best, cmin)
+        best, xb = _soft_barrier((best, xb))
+    return best
+
+
+def streaming_dists_xla(kernel: KernelFn, xb: jax.Array, sup: jax.Array,
+                        coef: jax.Array, sqnorm: jax.Array,
+                        diag_b: jax.Array, *, kc: int = STREAM_CHUNK,
+                        precision: str = "f32") -> jax.Array:
+    """Full (b, k) distance block, computed slab-by-slab.  The sharded
+    local step needs the materialized block for its model-axis all_gather
+    — (b_loc, k_loc) is small; the win is never holding the (b_loc,
+    k_loc*W) strip.  The same barrier chain as
+    :func:`streaming_assign_xla` keeps the slabs sequential."""
+    k, _ = coef.shape
+    cast = _precision_cast(kernel, precision)
+    out = []
+    for j0, kk in center_chunks(k, kc):
+        dd = _chunk_dists(kernel, cast, xb, sup, coef, sqnorm, diag_b,
+                          j0, kk)
+        dd, xb = _soft_barrier((dd, xb))
+        out.append(dd)
+    return jnp.concatenate(out, axis=1)
+
+
+def streamed_sqnorm(kernel: KernelFn, x: jax.Array, idx: jax.Array,
+                    coef: jax.Array, *, kc: int = STREAM_CHUNK,
+                    compute_dtype=None) -> jax.Array:
+    """<C_j, C_j> recompute over INDEX windows, center-chunked and
+    barrier-chained: per-center op sequence identical to
+    ``minibatch._sqnorm_recompute`` (bit-identical results), but only one
+    (kc, W, W) Gram slab is ever live instead of the full (k, W, W) stack
+    — at production shapes this is the step's LARGEST allocation, so
+    streaming it is what actually lowers the fused step's peak memory.
+    Callers must route gram_rows-capable kernels to the composed
+    recompute instead (one bulk row lookup beats per-chunk lookups)."""
+    k = idx.shape[0]
+
+    def one(idx_row, coef_row):
+        pts = x[idx_row]                                       # (W, d)
+        if compute_dtype is not None:
+            pts = pts.astype(compute_dtype)
+        g = kernel_cross(kernel, pts, pts)                     # (W, W)
+        if compute_dtype is not None:
+            g = g.astype(jnp.float32)
+        return coef_row @ (g @ coef_row)
+
+    outs = []
+    for j0, kk in center_chunks(k, kc):
+        o = jax.vmap(one)(idx[j0:j0 + kk], coef[j0:j0 + kk])
+        o, x = _soft_barrier((o, x))
+        outs.append(o)
+    return jnp.concatenate(outs)
+
+
+def streamed_sqnorm_pts(kernel: KernelFn, pts: jax.Array, coef: jax.Array,
+                        *, kc: int = STREAM_CHUNK,
+                        compute_dtype=None) -> jax.Array:
+    """:func:`streamed_sqnorm` over COORDINATE windows (k, W, d) — the
+    sharded step's layout; per-center ops identical to the paper-faithful
+    branch of ``distributed._make_local_step``."""
+    k = pts.shape[0]
+
+    def one(pts_row, coef_row):
+        p = pts_row if compute_dtype is None \
+            else pts_row.astype(compute_dtype)
+        g = kernel_cross(kernel, p, p)
+        return coef_row @ (g.astype(jnp.float32) @ coef_row)
+
+    outs = []
+    for j0, kk in center_chunks(k, kc):
+        o = jax.vmap(one)(pts[j0:j0 + kk], coef[j0:j0 + kk])
+        o, pts = _soft_barrier((o, pts))
+        outs.append(o)
+    return jnp.concatenate(outs)
+
+
+# ---------------------------------------------------------------- Pallas
+def _stream_body(x_ref, xsq_ref, diag_ref, sup_ref, supsq_ref, coef_ref,
+                 sqn_ref, best_ref, idx_ref, p_acc, *, kind, p0, p1, p2,
+                 bf16):
+    j = pl.program_id(1)
+    iw = pl.program_id(2)
+    nw = pl.num_programs(2)
+
+    @pl.when(iw == 0)
+    def _init_acc():
+        p_acc[...] = jnp.zeros_like(p_acc)
+
+    x = x_ref[...]
+    s = sup_ref[0]
+    if bf16:
+        x = x.astype(jnp.bfloat16)
+        s = s.astype(jnp.bfloat16)
+    xy = jax.lax.dot_general(x, s, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    kv = _apply_kernel(xy, xsq_ref[...].astype(jnp.float32),
+                       supsq_ref[0].astype(jnp.float32), kind, p0, p1, p2)
+    p_acc[:, 0] += kv @ coef_ref[0].astype(jnp.float32)
+
+    @pl.when(iw == nw - 1)
+    def _fold():
+        d = diag_ref[...].astype(jnp.float32) - 2.0 * p_acc[:, 0] \
+            + sqn_ref[0]
+        first = j == 0
+        prev = jnp.where(first, jnp.full_like(d, jnp.inf), best_ref[:, 0])
+        prev_i = jnp.where(first, jnp.zeros_like(idx_ref[:, 0]),
+                           idx_ref[:, 0])
+        upd = d < prev
+        best_ref[:, 0] = jnp.where(upd, d, prev)
+        idx_ref[:, 0] = jnp.where(upd, jnp.full_like(prev_i, j), prev_i)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "p0", "p1", "p2", "bt", "st", "bf16", "interpret"))
+def streaming_assign_pallas(
+        xb: jax.Array, sup: jax.Array, coef: jax.Array, sqnorm: jax.Array,
+        diag_b: jax.Array, *, kind: str = "gaussian", p0: float = 1.0,
+        p1: float = 1.0, p2: int = 2, bt: int = 128, st: int = 128,
+        bf16: bool = False, interpret: bool = False):
+    """xb (b, d); sup (k, W, d); coef (k, W); sqnorm (k,); diag_b (b,)
+    -> (best (b,) f32, assign (b,) int32).
+
+    b / W / d are padded to tile multiples (zero support points with zero
+    coefficients contribute nothing; padded batch rows are sliced off).
+    The online-argmin outputs live in (bt, 1) blocks revisited across the
+    two innermost grid axes — never written back per center."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    b, d = xb.shape
+    k, w, _ = sup.shape
+    bp, wp, dp = -b % bt, -w % st, -d % 128
+    xb_p = jnp.pad(xb, ((0, bp), (0, dp)))
+    sup_p = jnp.pad(sup, ((0, 0), (0, wp), (0, dp)))
+    coef_p = jnp.pad(coef, ((0, 0), (0, wp)))
+    diag_p = jnp.pad(diag_b, (0, bp))
+    xsq = jnp.sum(xb_p.astype(jnp.float32) ** 2, axis=-1)
+    supsq = jnp.sum(sup_p.astype(jnp.float32) ** 2, axis=-1)
+
+    bb, dd = xb_p.shape
+    ww = sup_p.shape[1]
+    grid = (bb // bt, k, ww // st)
+
+    best, idx = pl.pallas_call(
+        functools.partial(_stream_body, kind=kind, p0=p0, p1=p1, p2=p2,
+                          bf16=bf16),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, dd), lambda ib, j, iw: (ib, 0)),
+            pl.BlockSpec((bt,), lambda ib, j, iw: (ib,)),
+            pl.BlockSpec((bt,), lambda ib, j, iw: (ib,)),
+            pl.BlockSpec((1, st, dd), lambda ib, j, iw: (j, iw, 0)),
+            pl.BlockSpec((1, st), lambda ib, j, iw: (j, iw)),
+            pl.BlockSpec((1, st), lambda ib, j, iw: (j, iw)),
+            pl.BlockSpec((1,), lambda ib, j, iw: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, 1), lambda ib, j, iw: (ib, 0)),
+            pl.BlockSpec((bt, 1), lambda ib, j, iw: (ib, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bb, 1), jnp.float32),
+            jax.ShapeDtypeStruct((bb, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bt, 1), jnp.float32)],
+        interpret=interpret,
+    )(xb_p, xsq, diag_p, sup_p, supsq, coef_p, sqnorm)
+    return best[:b, 0], idx[:b, 0]

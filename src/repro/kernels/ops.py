@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from repro.core.kernel_fns import (
     Gaussian, KernelFn, Linear, Polynomial,
 )
-from repro.kernels import ref
+from repro.kernels import fused_step, ref
 from repro.kernels.cached_gather import cached_assign_dots_pallas
 from repro.kernels.fused_assign import fused_batch_center_dots_pallas
 from repro.kernels.kernel_matmul import kernel_matmul_pallas
@@ -81,6 +81,84 @@ def cached_assign_dots(rows: jax.Array, sup_ids: jax.Array,
         st = _clamp_tile(st, coef.shape[1], 8)
     return cached_assign_dots_pallas(rows, sup_ids, coef, bt=bt, st=st,
                                      interpret=interpret)
+
+
+def _streaming_dispatch(kernel: KernelFn, interpret):
+    """(disp, interpret): the streaming kernels run the Pallas form only
+    on TPU for MXU-friendly kernels; everywhere else (CPU CI, Laplacian,
+    index-data kernels) the structural XLA fallback runs — it is the
+    bit-identical-at-f32 twin of the composed step, which interpret-mode
+    Pallas (per-grid-cell emulation) is not."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _dispatch(kernel), interpret
+
+
+def streaming_assign(kernel: KernelFn, xb: jax.Array, sup_flat: jax.Array,
+                     coef: jax.Array, sqnorm: jax.Array,
+                     diag_b: jax.Array, *, precision: str = "f32",
+                     bt: int = 128, st: int = 128,
+                     kc: int = fused_step.STREAM_CHUNK,
+                     interpret=None):
+    """Streaming fused assignment: (best_dist (b,), assign (b,) int32)
+    over all k centers without materializing the (b, k*W) cross strip or
+    the (b, k) distances — the `step="fused"` hot pass.
+    ``sup_flat``: (k*W, d) support rows (index-data rows for cached /
+    precomputed kernels)."""
+    k, w = coef.shape
+    sup = sup_flat.reshape(k, w, sup_flat.shape[-1])
+    disp, interpret = _streaming_dispatch(kernel, interpret)
+    if disp is None or interpret:
+        return fused_step.streaming_assign_xla(
+            kernel, xb, sup_flat, coef, sqnorm, diag_b, kc=kc,
+            precision=precision)
+    kind, p0, p1, p2 = disp
+    return fused_step.streaming_assign_pallas(
+        xb, sup, coef, sqnorm, diag_b, kind=kind, p0=p0, p1=p1, p2=p2,
+        bt=bt, st=st, bf16=precision in ("bf16", "bfloat16"),
+        interpret=False)
+
+
+def streaming_min(kernel: KernelFn, xb: jax.Array, sup_flat: jax.Array,
+                  coef: jax.Array, sqnorm: jax.Array, diag_b: jax.Array,
+                  *, precision: str = "f32", bt: int = 128, st: int = 128,
+                  kc: int = fused_step.STREAM_CHUNK, interpret=None):
+    """Streaming min distance (b,) only — the fused step's post-update
+    objective pass (assignment indices not needed)."""
+    disp, interpret = _streaming_dispatch(kernel, interpret)
+    if disp is None or interpret:
+        return fused_step.streaming_min_xla(
+            kernel, xb, sup_flat, coef, sqnorm, diag_b, kc=kc,
+            precision=precision)
+    k, w = coef.shape
+    kind, p0, p1, p2 = disp
+    best, _ = fused_step.streaming_assign_pallas(
+        xb, sup_flat.reshape(k, w, sup_flat.shape[-1]), coef, sqnorm,
+        diag_b, kind=kind, p0=p0, p1=p1, p2=p2, bt=bt, st=st,
+        bf16=precision in ("bf16", "bfloat16"), interpret=False)
+    return best
+
+
+def streaming_dists(kernel: KernelFn, xb: jax.Array, sup_flat: jax.Array,
+                    coef: jax.Array, sqnorm: jax.Array, diag_b: jax.Array,
+                    *, precision: str = "f32", bt: int = 128,
+                    st: int = 128, kc: int = fused_step.STREAM_CHUNK,
+                    interpret=None) -> jax.Array:
+    """Full (b, k) distance block without the (b, k*W) strip — the fused
+    SHARDED step's assignment pass (the model-axis all_gather needs the
+    materialized per-local-center block).  On TPU the per-center dots run
+    through the fused Pallas contraction; elsewhere the slab fallback."""
+    disp, interpret = _streaming_dispatch(kernel, interpret)
+    if disp is None or interpret:
+        return fused_step.streaming_dists_xla(
+            kernel, xb, sup_flat, coef, sqnorm, diag_b, kc=kc,
+            precision=precision)
+    cdt = jnp.bfloat16 if precision in ("bf16", "bfloat16") else None
+    xbc = xb.astype(cdt) if cdt is not None else xb
+    supc = sup_flat.astype(cdt) if cdt is not None else sup_flat
+    p = fused_batch_center_dots(kernel, xbc, supc, coef, bt=bt, st=st,
+                                interpret=False)
+    return diag_b[:, None].astype(jnp.float32) - 2.0 * p + sqnorm[None, :]
 
 
 def kernel_matmul(kernel: KernelFn, x: jax.Array, y: jax.Array,

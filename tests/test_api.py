@@ -415,9 +415,10 @@ EXPECTED_CONFIG_FIELDS = [
     "k", "batch_size", "tau", "rate", "sqnorm_mode", "eval_mode",
     "epsilon", "max_iters", "use_pallas", "compute_dtype", "kernel",
     "kernel_params", "init", "early_stop", "cache", "distribution",
-    "restarts", "sampler", "jit", "cache_tile", "cache_capacity",
-    "cache_dtype", "reuse", "refresh", "data_axes", "model_axis",
-    "restart_axis", "eval_batch_size", "share_eval_gram",
+    "restarts", "sampler", "jit", "step", "precision", "prefetch",
+    "cache_tile", "cache_capacity", "cache_dtype", "reuse", "refresh",
+    "data_axes", "model_axis", "restart_axis", "eval_batch_size",
+    "share_eval_gram",
 ]
 
 

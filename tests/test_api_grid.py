@@ -338,6 +338,81 @@ def test_point_fused_restart_sharded_lru_matches_uncached():
     assert lab.shape == (64,) and int(jnp.max(lab)) < 4
 
 
+# ------------------------------------------------------- step axis (fused)
+_CS_FIELDS = ("idx", "coef", "sqnorm", "counts", "head")
+_DS_FIELDS = ("pts", "coef", "sqnorm", "counts", "head")
+
+_STEP_POINTS = {
+    "single_host": (dict(cache="none", distribution="single", jit=False),
+                    None, _CS_FIELDS),
+    "single_jit": (dict(cache="none", distribution="single", jit=True),
+                   None, _CS_FIELDS),
+    "precomputed": (dict(cache="precomputed", distribution="single",
+                         jit=True), None, _CS_FIELDS),
+    "single_lru": (dict(cache="lru", distribution="single", jit=False,
+                        cache_tile=32, cache_capacity=8), None,
+                   _CS_FIELDS),
+    "nested_lru": (dict(cache="lru", sampler="nested",
+                        distribution="single", jit=False, cache_tile=32,
+                        cache_capacity=8), None, _CS_FIELDS),
+    "sharded_jit": (dict(cache="none", distribution="sharded", jit=True),
+                    "mesh", _DS_FIELDS),
+    "sharded_host": (dict(cache="none", distribution="sharded",
+                          jit=False), "mesh", _DS_FIELDS),
+    "sharded_lru": (dict(cache="lru", distribution="sharded", jit=True,
+                         cache_tile=32, cache_capacity=16), "mesh",
+                    _DS_FIELDS),
+    "multi_restart": (dict(cache="none", distribution="single",
+                           restarts=3), None, _CS_FIELDS),
+    "fused_restart": (dict(cache="none", distribution="sharded", jit=True,
+                           restarts=3), "fused_mesh", _DS_FIELDS),
+    "fused_restart_lru": (dict(cache="lru", distribution="sharded",
+                               jit=True, restarts=2, cache_tile=32,
+                               cache_capacity=16), "fused_mesh",
+                          _DS_FIELDS),
+}
+
+
+@pytest.mark.parametrize("point", sorted(_STEP_POINTS))
+def test_step_fused_bit_identical_to_composed(point):
+    """The PR-5 tentpole bar: `step="fused"` (streaming fused passes —
+    online argmin, slab-chunked sqnorm, no materialized strip) at f32 is
+    BIT-IDENTICAL to `step="composed"` on every plan family — states,
+    histories and restart diagnostics alike."""
+    kw, mesh_kind, fields = _STEP_POINTS[point]
+    mesh = None
+    if mesh_kind == "mesh":
+        mesh = _mesh1()
+    elif mesh_kind == "fused_mesh":
+        mesh = _fused_mesh1()
+    x = _blobs()
+    ec = KernelKMeans(_cfg(step="composed", **kw), mesh=mesh).fit(x, KEY)
+    ef = KernelKMeans(_cfg(step="fused", **kw), mesh=mesh).fit(x, KEY)
+    for f in fields:
+        np.testing.assert_array_equal(np.asarray(getattr(ec.state_, f)),
+                                      np.asarray(getattr(ef.state_, f)),
+                                      err_msg=f"{point}:{f}")
+    if ec.history_ is not None:
+        assert ec.history_ == ef.history_
+    if ec.result_ is not None:
+        np.testing.assert_array_equal(np.asarray(ec.result_.objectives),
+                                      np.asarray(ef.result_.objectives))
+        np.testing.assert_array_equal(np.asarray(ec.result_.iters),
+                                      np.asarray(ef.result_.iters))
+
+
+def test_step_fused_weighted_bit_identical():
+    """Sample weights ride the host loop; the fused step must reproduce
+    the weighted trajectories too."""
+    x = _blobs()
+    w = jnp.abs(jnp.sin(jnp.arange(x.shape[0], dtype=jnp.float32))) + 0.1
+    ec = KernelKMeans(_cfg(cache="none", distribution="single", jit=False,
+                           step="composed")).fit(x, KEY, sample_weight=w)
+    ef = KernelKMeans(_cfg(cache="none", distribution="single", jit=False,
+                           step="fused")).fit(x, KEY, sample_weight=w)
+    _assert_state_equal(ec.state_, ef.state_)
+
+
 # -------------------------------------------------- pad-and-mask (1 device)
 def test_n_valid_none_matches_legacy_bound_single_shard():
     """n_valid == full rows on a 1-shard mesh: the masked sampler bound is
