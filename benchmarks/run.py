@@ -14,6 +14,9 @@ with '#').  Mapping to the paper:
   rates          §6 claim 2: beta learning rate vs sklearn rate.
   gamma_table    Table 1: gamma per (dataset x kernel).
   termination    Thm 1(2): iterations-to-stop vs 1/epsilon.
+  service        serving gates (docs/serving.md): microbatch p99 vs bare
+                 predict, zero recompiles after warmup, snapshot-swap
+                 pause — writes BENCH_service.json.
 """
 from __future__ import annotations
 
@@ -692,6 +695,159 @@ def bench_api_overhead(fast: bool):
         "call — plan dispatch must resolve at trace time")
 
 
+# ----------------------------------------------------------------- service
+def bench_service(fast: bool):
+    """PR-7 serving gate (docs/serving.md): the learner/actor split must
+    serve microbatched ``predict`` at p99 <= 2x a bare ``predict`` call at
+    the same bucket shape, with ZERO recompiles after warmup (both the
+    cross-executor ``program_builds()`` counter and the actor's own
+    ``serve_compiles``), and keep serving across atomic snapshot swaps
+    with the load+warm pause bounded and reported.  Writes
+    BENCH_service.json; asserted, so CI gates on it.
+
+    Three phases: (1) learner rounds — the resume program must compile
+    once and stay flat; (2) steady-state closed-loop serving — latency vs
+    the bare baseline; (3) snapshot churn — a publisher thread pushes new
+    versions while the closed loop keeps serving, exercising the
+    off-serving-path swap."""
+    import json
+    import os
+    import tempfile
+    import threading
+
+    from repro.api.executors import program_builds
+    from repro.service.demo import build_service
+    from repro.service.telemetry import LatencyWindow
+
+    if fast:
+        capacity, b, tau, k, d = 1024, 128, 64, 8, 16
+        bucket, rounds, reps_bare, warm_reqs, measured = 256, 4, 40, 8, 80
+        n_swaps = 2
+    else:
+        capacity, b, tau, k, d = 2048, 256, 128, 8, 16
+        bucket, rounds, reps_bare, warm_reqs, measured = 512, 6, 60, 16, 250
+        n_swaps = 3
+
+    with tempfile.TemporaryDirectory(prefix="repro_bench_svc_") as snapdir:
+        learner, actor, store, buf, _ = build_service(
+            snapdir, k=k, d=d, capacity=capacity, batch_size=b, tau=tau,
+            iters_per_round=2, publish_every=2, buckets=(bucket,),
+            queue_depth=64, max_wait_ms=0.5)
+        actor.poll_every_s = 0.05           # snappy swap pickup
+
+        # phase 1: learner rounds; the partial_fit resume program must
+        # compile on round 1 and never again (fixed buffer shape)
+        builds_per_round = []
+        learner.on_round = lambda r: builds_per_round.append(
+            program_builds())
+        learner.run(rounds)
+        assert builds_per_round[-1] == builds_per_round[1], (
+            f"resume program rebuilt across rounds: {builds_per_round}")
+        print(f"service_fit_builds,,"
+              f"{builds_per_round[-1]}_flat_after_round_1")
+
+        # bare baseline: the same assignment at the same (bucket, d)
+        # shape, no queue/pad/thread in the way
+        _, est_bare = store.load()
+        rng = np.random.default_rng(123)
+        queries = [rng.normal(0, 1, (bucket, d)).astype(np.float32)
+                   for _ in range(8)]
+        np.asarray(est_bare.predict(queries[0]))          # compile + warm
+        bare = []
+        for i in range(reps_bare):
+            t0 = time.perf_counter()
+            np.asarray(est_bare.predict(queries[i % len(queries)]))
+            bare.append((time.perf_counter() - t0) * 1e3)
+        bare_p50, bare_p99 = (float(np.percentile(bare, q))
+                              for q in (50, 99))
+
+        # actor warmup, then freeze the compile counters
+        actor.start()
+        for i in range(warm_reqs):
+            actor.predict(queries[i % len(queries)])
+        builds_warm = program_builds()
+        serve_warm = actor.serve_compiles
+
+        # phase 2: steady-state closed loop — full-bucket requests, so no
+        # coalesce wait and no padding; latency is queue + serve + scatter
+        actor.latency = LatencyWindow()
+        t0 = time.perf_counter()
+        for i in range(measured):
+            actor.predict(queries[i % len(queries)])
+        wall = time.perf_counter() - t0
+        micro = actor.latency.percentiles()
+        qps_rows = measured * bucket / wall
+
+        # phase 3: snapshot churn while serving — the swapper thread
+        # loads + warms off the serving path; the closed loop must keep
+        # completing requests throughout
+        base_v = store.latest_version()
+
+        def _publish():
+            for j in range(n_swaps):
+                time.sleep(0.25)
+                store.publish(learner.est, base_v + j + 1)
+
+        swaps_before = actor.swaps
+        actor.latency = LatencyWindow()
+        pub = threading.Thread(target=_publish, daemon=True)
+        pub.start()
+        served_churn = 0
+        t0 = time.perf_counter()
+        while (actor.swaps - swaps_before < n_swaps
+               and time.perf_counter() - t0 < 30.0):
+            actor.predict(queries[served_churn % len(queries)])
+            served_churn += 1
+        pub.join(10.0)
+        churn = actor.latency.percentiles()
+        swaps_during = actor.swaps - swaps_before
+        pause_ms = actor.last_swap_pause_ms
+        builds_end = program_builds()
+        serve_end = actor.serve_compiles
+        actor.stop()
+
+    ratio = micro["p99"] / bare_p99
+    print(f"service_bare_predict,{bare_p50 * 1e3:.0f},"
+          f"p99={bare_p99:.2f}ms")
+    print(f"service_microbatch,{micro['p50'] * 1e3:.0f},"
+          f"p99={micro['p99']:.2f}ms {ratio:.2f}x_bare "
+          f"{qps_rows:.0f}rows_per_s")
+    print(f"service_swap,,{swaps_during}_swaps "
+          f"pause={pause_ms:.0f}ms served_during={served_churn}")
+
+    out = dict(
+        workload=dict(k=k, d=d, capacity=capacity, batch_size=b, tau=tau,
+                      bucket=bucket, rounds=rounds, fast=fast,
+                      backend=jax.default_backend()),
+        fit_builds_per_round=builds_per_round,
+        bare_ms=dict(p50=bare_p50, p99=bare_p99, reps=reps_bare),
+        micro_ms=dict(p50=micro["p50"], p99=micro["p99"],
+                      count=micro["count"]),
+        micro_over_bare_p99=ratio,
+        qps_rows=qps_rows,
+        qps_requests=measured / wall,
+        swap=dict(swaps=swaps_during, last_pause_ms=pause_ms,
+                  served_during_churn=served_churn,
+                  p99_during_churn_ms=churn["p99"]),
+        programs=dict(fit_builds=builds_end, serve_compiles=serve_end,
+                      recompiles_after_warmup=(builds_end - builds_warm)
+                      + (serve_end - serve_warm)))
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with open(os.path.join(root, "BENCH_service.json"), "w") as f:
+        json.dump(out, f, indent=2)
+
+    assert ratio <= 2.0, (
+        f"microbatched p99 {micro['p99']:.2f}ms is {ratio:.2f}x the bare "
+        f"predict p99 {bare_p99:.2f}ms at the same ({bucket}, {d}) shape")
+    assert builds_end == builds_warm and serve_end == serve_warm, (
+        f"recompiles after warmup: fit {builds_warm}->{builds_end}, "
+        f"serve {serve_warm}->{serve_end}")
+    assert swaps_during >= 1, "no snapshot swap observed while serving"
+    assert pause_ms is not None and pause_ms < 10_000, (
+        f"snapshot swap load+warm took {pause_ms}ms")
+    assert served_churn > 0, "serving stalled during snapshot churn"
+
+
 BENCHES = {
     "speedup": bench_speedup,
     "multi_restart": bench_multi_restart,
@@ -699,6 +855,7 @@ BENCHES = {
     "kernel_cache": bench_kernel_cache,
     "step_fuse": bench_step_fuse,
     "api_overhead": bench_api_overhead,
+    "service": bench_service,
     "n_independence": bench_n_independence,
     "quality": bench_quality,
     "tau_sweep": bench_tau_sweep,

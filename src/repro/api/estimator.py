@@ -21,6 +21,7 @@ from __future__ import annotations
 import json
 from typing import Any, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -194,6 +195,52 @@ class KernelKMeans:
 
     def fit_predict(self, X, key: Any = 0, **kw):
         return self.fit(X, key, **kw).predict(X)
+
+    # ---------------------------------------------------- snapshot hooks
+    # The serving split (repro.service) drives a long-lived estimator from
+    # learner threads: it needs the resumable carry as HOST arrays (the
+    # compiled resume program donates the device buffers, so a device-side
+    # reference dies on the next partial_fit) and an in-place restore that
+    # keeps the resolved plan — these three hooks are that surface.
+
+    def snapshot_carry(self):
+        """The current :class:`FitCarry` with every array leaf
+        materialized to host numpy — safe to hold across donating
+        ``partial_fit`` calls, to checkpoint, or to hand to another
+        thread.  ``None`` when the fitted plan is not resumable."""
+        carry = carry_of(self._outcome)
+        if carry is None:
+            return None
+        return FitCarry(
+            state=jax.tree.map(lambda a: np.asarray(a), carry.state),
+            key=np.asarray(carry.key), steps=carry.steps,
+            iters=carry.iters)
+
+    def restore_carry(self, carry: FitCarry) -> "KernelKMeans":
+        """Adopt ``carry`` as the resume point for the next
+        ``partial_fit`` (the inverse of :meth:`snapshot_carry`); the
+        resolved plan and compiled programs are kept."""
+        self._outcome = outcome_from_carry(
+            FitCarry(state=jax.tree_util.tree_map(jnp.asarray, carry.state),
+                     key=jnp.asarray(carry.key), steps=carry.steps,
+                     iters=carry.iters))
+        self._serving = None
+        self.state_ = self._outcome.state
+        self.iters_ = self._outcome.iters
+        self.history_ = None
+        return self
+
+    def save_atomic(self, path: str) -> str:
+        """:meth:`save` through a same-directory temp file +
+        ``os.replace`` — a concurrent reader (a serving actor) sees either
+        the complete old file or the complete new one, never a torn
+        write."""
+        import os
+
+        tmp = f"{path}.tmp.{os.getpid()}"
+        self.save(tmp)
+        os.replace(tmp, path)
+        return path
 
     # -------------------------------------------------------- save / load
     def save(self, path: str) -> str:

@@ -1,5 +1,6 @@
 """Serving launcher: batched prefill + decode loop, plus the clustering
-serving path (multi-restart fit -> sharded assignment of large query sets).
+serving path (multi-restart fit -> sharded assignment of large query sets)
+and the always-on service demo (repro.service learner/actor split).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
         --batch 4 --prompt-len 32 --gen 16
@@ -8,6 +9,15 @@ serving path (multi-restart fit -> sharded assignment of large query sets).
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.serve --cluster --restarts 4 \
         --n 8192 --queries 65536 --k 8
+
+    # serve from a published snapshot instead of refitting in-process
+    PYTHONPATH=src python -m repro.launch.serve --cluster \
+        --snapshot centers.npz --queries 65536
+
+    # always-on service: learner thread publishing snapshots, actor
+    # microbatching requests against the latest one
+    PYTHONPATH=src python -m repro.launch.serve --service \
+        --rounds 12 --requests 200
 """
 from __future__ import annotations
 
@@ -69,30 +79,46 @@ def serve_cluster(args):
     """Fit best-of-R through the KernelKMeans estimator (the restart axis
     device-sharded), then serve sharded batch assignment — the clustering
     analogue of prefill+decode: one expensive fit, then high-throughput
-    predict over query shards."""
+    predict over query shards.
+
+    With ``--snapshot PATH`` the fit is skipped entirely: the estimator
+    is rebuilt from a published snapshot (``KernelKMeans.load`` — the
+    same file the service's learner publishes) and serves from it; the
+    fitting and serving processes need share nothing but that file."""
     from repro.api import KernelKMeans, SolverConfig
     from repro.data import blobs
     from repro.launch.mesh import make_restart_mesh
 
     x, _ = blobs(n=args.n, d=args.d, k=args.k, seed=args.seed)
     x = jnp.asarray(x)
-    cfg = SolverConfig(k=args.k, batch_size=args.batch_size, tau=args.tau,
-                       max_iters=args.max_iters, epsilon=-1.0,
-                       kernel="rbf", kernel_params={"kappa": 1.0},
-                       cache="none", distribution="single",
-                       restarts=args.restarts)
-    mesh = make_restart_mesh(args.restarts)
-    est = KernelKMeans(cfg, mesh=mesh)
 
-    t0 = time.time()
-    res = est.fit(x, key=args.seed).result_
-    jax.block_until_ready(res.objectives)
-    t_fit = time.time() - t0
-    print(f"cluster fit [{est.plan_.name}]: R={args.restarts} on "
-          f"{mesh.devices.size} device(s) "
-          f"in {t_fit * 1e3:.1f} ms; best objective "
-          f"{float(res.objective):.4f} (restart {int(res.best)}, "
-          f"per-restart {[round(float(o), 4) for o in res.objectives]})")
+    if args.snapshot:
+        t0 = time.time()
+        est = KernelKMeans.load(args.snapshot)
+        print(f"cluster serve: loaded snapshot {args.snapshot} "
+              f"(k={est.config.k}, kernel={est.config.kernel!r}) "
+              f"in {(time.time() - t0) * 1e3:.1f} ms — no in-process fit")
+    else:
+        cfg = SolverConfig(k=args.k, batch_size=args.batch_size,
+                           tau=args.tau, max_iters=args.max_iters,
+                           epsilon=-1.0, kernel="rbf",
+                           kernel_params={"kappa": 1.0}, cache="none",
+                           distribution="single", restarts=args.restarts)
+        mesh = make_restart_mesh(args.restarts)
+        est = KernelKMeans(cfg, mesh=mesh)
+
+        t0 = time.time()
+        res = est.fit(x, key=args.seed).result_
+        jax.block_until_ready(res.objectives)
+        t_fit = time.time() - t0
+        print(f"cluster fit [{est.plan_.name}]: R={args.restarts} on "
+              f"{mesh.devices.size} device(s) "
+              f"in {t_fit * 1e3:.1f} ms; best objective "
+              f"{float(res.objective):.4f} (restart {int(res.best)}, "
+              f"per-restart {[round(float(o), 4) for o in res.objectives]})")
+        if args.save_snapshot:
+            est.save_atomic(args.save_snapshot)
+            print(f"saved snapshot -> {args.save_snapshot}")
 
     xq = jnp.tile(x, (-(-args.queries // args.n), 1))[:args.queries]
     pred = est.predict(xq)                     # warm compile
@@ -101,10 +127,13 @@ def serve_cluster(args):
     pred = est.predict(xq)
     pred.block_until_ready()
     t_pred = time.time() - t0
+    where = ("from snapshot" if args.snapshot
+             else f"sharded over {est.mesh.devices.size} device(s)")
     print(f"serve: {xq.shape[0]} queries in {t_pred * 1e3:.1f} ms "
           f"({xq.shape[0] / max(t_pred, 1e-9):.0f} assignments/s, "
-          f"sharded over {mesh.devices.size} device(s))")
-    print("cluster sizes:", jnp.bincount(pred, length=args.k).tolist())
+          f"{where})")
+    print("cluster sizes:",
+          jnp.bincount(pred, length=est.config.k).tolist())
 
 
 def serve_cluster_cached(args):
@@ -179,6 +208,41 @@ def serve_cluster_cached(args):
           f"+{after['misses'] - before['misses']} misses "
           f"(lifetime hit rate {after['hit_rate']:.2%})")
     print("cluster sizes:", jnp.bincount(pred, length=args.k).tolist())
+    # the uniform service telemetry shape (repro.service.telemetry):
+    # cache counters + compile counter in the same dict every service
+    # component reports through
+    from repro.service import telemetry
+    t = telemetry.poll(cache=ck.cache)
+    print(telemetry.format_line(t))
+
+
+def serve_service(args):
+    """Always-on clustering service demo (repro.service): a learner
+    thread runs continuous partial_fit over the bounded ingest buffer and
+    publishes versioned snapshots; an actor thread serves microbatched
+    predictions from the latest snapshot with admission queueing and
+    atomic swap.  Prints the uniform telemetry line per publish and a
+    final summary."""
+    from repro.service.demo import run_demo
+
+    t = run_demo(rounds=args.rounds, requests=args.requests,
+                 request_rows=args.request_rows, seed=args.seed,
+                 k=args.k, d=args.d, capacity=args.buffer_capacity,
+                 batch_size=args.batch_size, tau=args.tau,
+                 iters_per_round=args.iters_per_round,
+                 publish_every=args.publish_every,
+                 buffer_mode=args.buffer_mode,
+                 arrivals_per_step=args.arrivals_per_step,
+                 log_every=args.publish_every)
+    demo = t["demo"]
+    lat = t["latency_ms"]
+    print(f"service: served {demo['served']} requests "
+          f"(client saw {demo['client_rejected']} backpressure rejects) "
+          f"over {demo['rounds']} learner rounds, snapshot versions "
+          f"{demo['versions']}")
+    print(f"service: p50 {lat['p50']:.2f} ms, p99 {lat['p99']:.2f} ms, "
+          f"serve compiles {t['programs']['serve_compiles']}, "
+          f"fit builds {t['programs']['fit_builds']}")
 
 
 def main():
@@ -192,6 +256,13 @@ def main():
     # clustering serving path
     ap.add_argument("--cluster", action="store_true",
                     help="serve kernel k-means assignments instead of an LM")
+    ap.add_argument("--snapshot", default=None,
+                    help="serve --cluster from this saved snapshot "
+                         "(KernelKMeans.load) instead of refitting "
+                         "in-process")
+    ap.add_argument("--save-snapshot", default=None,
+                    help="after a --cluster fit, atomically save the "
+                         "snapshot here (for later --snapshot serving)")
     ap.add_argument("--restarts", type=int, default=4)
     ap.add_argument("--n", type=int, default=8192)
     ap.add_argument("--d", type=int, default=16)
@@ -208,8 +279,24 @@ def main():
                     default="lru")
     ap.add_argument("--cache-tile", type=int, default=512)
     ap.add_argument("--cache-capacity", type=int, default=16)
+    # always-on service demo (repro.service)
+    ap.add_argument("--service", action="store_true",
+                    help="run the learner/actor service demo "
+                         "(docs/serving.md)")
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--request-rows", type=int, default=256)
+    ap.add_argument("--buffer-capacity", type=int, default=2048)
+    ap.add_argument("--buffer-mode", choices=["reservoir", "nested"],
+                    default="reservoir")
+    ap.add_argument("--arrivals-per-step", type=int, default=512)
+    ap.add_argument("--iters-per-round", type=int, default=4)
+    ap.add_argument("--publish-every", type=int, default=4)
     args = ap.parse_args()
 
+    if args.service:
+        serve_service(args)
+        return
     if args.cache:
         serve_cluster_cached(args)
         return

@@ -1,0 +1,35 @@
+"""repro.service — the always-on clustering service (learner/actor split).
+
+The paper's O(kb^2)-per-step mini-batch kernel k-means makes CONTINUOUS
+clustering of live traffic affordable; this package is the serving story
+around it:
+
+* :class:`IngestBuffer` — bounded, deterministically-admitted ingest
+  (reservoir / nested prefix-reuse), content pure in ``(seed, step)``.
+* :class:`Learner` — continuous ``KernelKMeans.partial_fit`` over the
+  buffer, publishing versioned snapshots; crash recovery through
+  :func:`repro.train.resilience.run_resilient` is bit-identical to an
+  uninterrupted run.
+* :class:`SnapshotStore` — versioned, write-temp-then-rename snapshot
+  files (the PR-4 save/load round-trip); readers never see a torn file.
+* :class:`Actor` — microbatched ``predict``/``transform`` from the
+  latest snapshot: bounded admission queue with :class:`Backpressure`,
+  pad-to-bucket shapes (zero steady-state recompiles), atomic snapshot
+  swap with a staleness bound.
+* :mod:`repro.service.telemetry` — one ``poll()`` dict + log line for
+  every counter (ingest/drops, queue depth, snapshot age/version,
+  p50/p99 latency, compile counters, Gram-tile-cache hits).
+
+See docs/serving.md for the architecture and knobs, and
+``python -m repro.launch.serve --service`` for the demo.
+"""
+from repro.service.actor import Actor, Backpressure
+from repro.service.buffer import IngestBuffer
+from repro.service.learner import Learner
+from repro.service.snapshot import SnapshotStore, StaleSnapshot
+from repro.service import telemetry
+
+__all__ = [
+    "Actor", "Backpressure", "IngestBuffer", "Learner", "SnapshotStore",
+    "StaleSnapshot", "telemetry",
+]

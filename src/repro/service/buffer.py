@@ -1,0 +1,169 @@
+"""Bounded ingest buffer for the always-on clustering service.
+
+The learner never fits live traffic directly: arrivals stream through a
+fixed-capacity buffer whose content after ``t`` pushes is a PURE FUNCTION
+of ``(seed, t)`` given a deterministic arrival stream.  That purity is the
+whole fault-tolerance story — a crashed learner rebuilds the exact buffer
+by replaying the stream (``replay_to``), so crash-recovery fits are
+bit-identical to uninterrupted ones (tests/test_service.py).
+
+Two admission modes:
+
+* ``mode='reservoir'`` — Vitter's Algorithm R, derandomized: arrival ``m``
+  lands in slot ``rng((seed, m)).integers(0, m + 1)`` iff that draw is
+  below capacity.  The buffer is a uniform sample of the WHOLE history;
+  every admission decision depends only on ``(seed, m)``.
+* ``mode='nested'`` — the nested prefix-reuse idiom of
+  :func:`repro.core.minibatch.sample_batch_nested` /
+  ``ClusterBatchPipeline(mode='nested')`` (Newling & Fleuret 2016) turned
+  into an admission policy: the first ``reuse * capacity`` slots are a
+  slowly-refreshing prefix (slot ``i`` turns over once per ``refresh``
+  pushes, staggered), the tail re-draws from the current push's arrivals
+  every step.  Consecutive buffer snapshots share most rows, which keeps
+  the learner's Gram working set (and the tile cache, when enabled) hot.
+
+Fixed capacity means a fixed ``(capacity, d)`` snapshot shape, so the
+learner's ``partial_fit`` resume program compiles ONCE and every later
+round reuses it (``program_builds()`` stays flat — the service bench
+gates on this).
+
+Counters (``pushed`` / ``admitted`` / ``dropped``) feed
+:func:`repro.service.telemetry.poll`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+_MODES = ("reservoir", "nested")
+_TAIL_SALT = 0x7A11      # matches sample_batch_nested's tail stream salt
+
+
+class IngestBuffer:
+    """Fixed-capacity, deterministically-admitted point buffer.
+
+    Parameters
+    ----------
+    capacity : rows held (the learner's dataset size — fixed shape).
+    dim : point dimensionality.
+    seed : admission-stream seed; content is pure in ``(seed, pushes)``.
+    mode : ``'reservoir'`` | ``'nested'`` (see module docs).
+    reuse, refresh : nested-mode prefix fraction / turnover period
+        (same meaning as ``SolverConfig.reuse`` / ``refresh``).
+    """
+
+    def __init__(self, capacity: int, dim: int, seed: int = 0,
+                 mode: str = "reservoir", reuse: float = 0.5,
+                 refresh: int = 8, dtype=np.float32):
+        if mode not in _MODES:
+            raise ValueError(f"mode={mode!r} not in {_MODES}")
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        self.capacity, self.dim, self.seed = int(capacity), int(dim), seed
+        self.mode, self.reuse, self.refresh = mode, float(reuse), int(refresh)
+        self.dtype = np.dtype(dtype)
+        self.reset()
+
+    # ------------------------------------------------------------- state
+    def reset(self) -> None:
+        self._data = np.zeros((self.capacity, self.dim), self.dtype)
+        self.pushes = 0          # completed push() calls
+        self.pushed = 0          # arrival rows seen
+        self.admitted = 0        # rows written into a slot
+        self._seen = 0           # reservoir: lifetime arrival count
+
+    @property
+    def dropped(self) -> int:
+        return self.pushed - self.admitted
+
+    @property
+    def full(self) -> bool:
+        """Every slot holds a real arrival (learner readiness gate)."""
+        if self.mode == "reservoir":
+            return self._seen >= self.capacity
+        # nested mode writes every slot on push 0 (prefix epoch rollover
+        # at step 0 + full tail redraw)
+        return self.pushes >= 1
+
+    def snapshot(self) -> np.ndarray:
+        """A host copy of the current ``(capacity, d)`` content."""
+        return self._data.copy()
+
+    # ------------------------------------------------------------ ingest
+    def push(self, points: np.ndarray) -> int:
+        """Admit one step's arrivals; returns rows admitted.  Decisions
+        depend only on ``(seed, arrival index / push index)`` — never on
+        wall clock or prior RNG state — so replaying the same stream
+        reproduces the content bit-exactly."""
+        pts = np.asarray(points, self.dtype)
+        if pts.ndim != 2 or pts.shape[1] != self.dim:
+            raise ValueError(f"expected (m, {self.dim}) arrivals, got "
+                             f"{pts.shape}")
+        took = (self._push_reservoir(pts) if self.mode == "reservoir"
+                else self._push_nested(pts))
+        self.pushed += pts.shape[0]
+        self.admitted += took
+        self.pushes += 1
+        return took
+
+    def _push_reservoir(self, pts: np.ndarray) -> int:
+        took = 0
+        for row in pts:
+            m = self._seen
+            if m < self.capacity:
+                slot = m
+            else:
+                slot = int(np.random.default_rng((self.seed, m))
+                           .integers(0, m + 1))
+                if slot >= self.capacity:
+                    slot = -1
+            if slot >= 0:
+                self._data[slot] = row
+                took += 1
+            self._seen += 1
+        return took
+
+    def _push_nested(self, pts: np.ndarray) -> int:
+        step, n_arr = self.pushes, pts.shape[0]
+        if n_arr == 0:
+            return 0
+        m = int(self.capacity * self.reuse)
+        taken = set()        # distinct arrival rows admitted this push
+        # prefix: slot i refreshes when its (staggered) epoch rolls over
+        for i in range(m):
+            if (step + i) % self.refresh == 0 or step == 0:
+                pick = int(np.random.default_rng(
+                    (self.seed, i, (step + i) // self.refresh))
+                    .integers(0, n_arr))
+                self._data[i] = pts[pick]
+                taken.add(pick)
+        # tail: fresh uniform (with replacement) draw from this push's
+        # arrivals — mirrors sample_batch_nested's fresh tail
+        tail = self.capacity - m
+        if tail > 0:
+            picks = np.random.default_rng(
+                (self.seed, step, _TAIL_SALT)).integers(0, n_arr, tail)
+            self._data[m:] = pts[picks]
+            taken.update(int(p) for p in picks)
+        return len(taken)
+
+    # ------------------------------------------------------------ replay
+    def replay_to(self, source: Callable[[int], np.ndarray],
+                  pushes: int) -> np.ndarray:
+        """Drive the buffer to exactly ``pushes`` completed pushes of the
+        deterministic ``source(step) -> (m, d)`` stream, rebuilding from
+        scratch when the target lies in the past (crash recovery rewinds
+        this way).  Returns a content snapshot."""
+        if pushes < self.pushes:
+            self.reset()
+        while self.pushes < pushes:
+            self.push(source(self.pushes))
+        return self.snapshot()
+
+    def stats(self) -> dict:
+        """Counter snapshot — the ``ingest`` section of telemetry.poll."""
+        return dict(mode=self.mode, capacity=self.capacity,
+                    pushes=self.pushes, pushed=self.pushed,
+                    admitted=self.admitted, dropped=self.dropped,
+                    full=bool(self.full))

@@ -1,0 +1,120 @@
+"""End-to-end service demo: learner thread + actor + synthetic traffic.
+
+Used by ``python -m repro.launch.serve --service`` and smoke-run in CI.
+Everything runs in one process (threads), but the only shared state
+between learner and actor is the snapshot DIRECTORY — the same wiring
+works across processes/hosts unchanged.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from repro.service.actor import Actor, Backpressure
+from repro.service.buffer import IngestBuffer
+from repro.service.learner import Learner
+from repro.service.snapshot import SnapshotStore
+from repro.service import telemetry
+
+
+def make_source(d: int, k: int, arrivals_per_step: int, seed: int = 0):
+    """Deterministic arrival stream: step ``t``'s block of a fixed blob
+    mixture, pure in ``(seed, t)`` (the replayability contract)."""
+    from repro.data import blobs
+
+    base, _ = blobs(n=max(4096, 4 * arrivals_per_step), d=d, k=k,
+                    seed=seed)
+    base = np.asarray(base, np.float32)
+
+    def source(step: int) -> np.ndarray:
+        rng = np.random.default_rng((seed, step, 0x50C))
+        idx = rng.integers(0, base.shape[0], arrivals_per_step)
+        return base[idx] + rng.normal(0, 0.01, (arrivals_per_step,
+                                                base.shape[1])) \
+            .astype(np.float32)
+
+    return source
+
+
+def build_service(snapshot_dir: str, *, k: int = 8, d: int = 16,
+                  capacity: int = 2048, batch_size: int = 256,
+                  tau: int = 128, iters_per_round: int = 4,
+                  publish_every: int = 4, buffer_mode: str = "reservoir",
+                  arrivals_per_step: int = 512, seed: int = 0,
+                  buckets=(64, 256, 1024), queue_depth: int = 256,
+                  max_wait_ms: float = 2.0, max_staleness_s=None,
+                  log_every: int = 0):
+    """Wire (learner, actor, store, buffer, source) — unstarted."""
+    from repro.api import KernelKMeans, SolverConfig
+
+    cfg = SolverConfig(k=k, batch_size=batch_size, tau=tau,
+                       max_iters=iters_per_round, epsilon=-1.0,
+                       early_stop=False, kernel="rbf",
+                       kernel_params={"kappa": 1.0}, cache="none",
+                       distribution="single", jit=True)
+    est = KernelKMeans(cfg)
+    store = SnapshotStore(snapshot_dir)
+    buf = IngestBuffer(capacity, d, seed=seed, mode=buffer_mode)
+    source = make_source(d, k, arrivals_per_step, seed=seed)
+    learner = Learner(est, buf, source, store,
+                      iters_per_round=iters_per_round,
+                      publish_every=publish_every, seed=seed,
+                      log_every=log_every)
+    actor = Actor(store, buckets=buckets, queue_depth=queue_depth,
+                  max_wait_ms=max_wait_ms, max_staleness_s=max_staleness_s)
+    return learner, actor, store, buf, source
+
+
+def run_demo(*, rounds: int = 12, requests: int = 200,
+             request_rows: int = 256, snapshot_dir=None, seed: int = 0,
+             log_every: int = 4, verbose: bool = True, **build_kw) -> dict:
+    """Learner fitting + publishing in the background while the actor
+    serves ``requests`` query blocks; returns the final telemetry poll
+    (plus served-label sanity fields)."""
+    tmp = None
+    if snapshot_dir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="repro_service_")
+        snapshot_dir = tmp.name
+    try:
+        learner, actor, store, buf, _ = build_service(
+            snapshot_dir, seed=seed, log_every=log_every, **build_kw)
+        # round 0 synchronously: the actor needs a first snapshot
+        learner.run(1)
+        learner.start(rounds - 1)
+        actor.start()
+
+        rng = np.random.default_rng(seed + 1)
+        d = buf.dim
+        served = rejected = 0
+        pending = []
+        for i in range(requests):
+            xq = rng.normal(0, 1, (request_rows, d)).astype(np.float32)
+            try:
+                pending.append(actor.submit(xq))
+            except Backpressure:
+                rejected += 1
+                time.sleep(0.002)
+            if len(pending) >= 8:
+                for req in pending:
+                    req.wait(60.0)
+                    served += 1
+                pending.clear()
+        for req in pending:
+            req.wait(60.0)
+            served += 1
+
+        learner.join(120.0)
+        t = telemetry.poll(buffer=buf, learner=learner, actor=actor)
+        t["demo"] = {"served": served, "client_rejected": rejected,
+                     "rounds": learner.rounds,
+                     "versions": store.versions()}
+        if verbose:
+            print(telemetry.format_line(t))
+        actor.stop()
+        learner.stop()
+        return t
+    finally:
+        if tmp is not None:
+            tmp.cleanup()

@@ -1,0 +1,175 @@
+"""Versioned, atomically-swapped snapshot store for the serving split.
+
+The learner publishes ``KernelKMeans`` snapshots (the PR-4 ``save``/
+``load`` round-trip, including the resumable :class:`FitCarry`) into a
+directory; actors poll ``latest_version()`` and load whole files.  Two
+invariants make the swap safe with zero coordination:
+
+* **Never a torn read.**  Every write goes to a same-directory temp file
+  and is ``os.replace``d into place (both the snapshot ``.npz`` and the
+  ``LATEST`` pointer) — a reader either sees the complete previous file or
+  the complete new one, never a partial write
+  (tests/test_service.py::test_snapshot_never_torn).
+* **Staleness is the reader's contract.**  ``load(max_age_s=...)`` raises
+  :class:`StaleSnapshot` when the newest snapshot is older than the bound
+  — an actor keeps serving its in-memory model (and reports the age via
+  telemetry) rather than silently serving arbitrarily old centers.
+
+The store also speaks the :class:`repro.train.checkpoint.Checkpointer`
+protocol (``save`` / ``restore`` / ``latest_step`` / ``wait``) through
+:meth:`as_checkpointer`, so :func:`repro.train.resilience.run_resilient`
+drives learner crash-recovery against the SAME files the actors serve
+from — the published snapshot IS the checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+_SNAP_RE = re.compile(r"^snapshot_(\d+)\.npz$")
+
+
+class StaleSnapshot(RuntimeError):
+    """Newest snapshot is older than the caller's staleness bound."""
+
+
+class SnapshotStore:
+    """Directory of ``snapshot_<version>.npz`` files + a ``LATEST``
+    pointer, all updated write-temp-then-rename.  ``keep`` bounds disk use
+    (older versions are pruned after a successful publish)."""
+
+    def __init__(self, directory: str, keep: int = 4):
+        self.dir = directory
+        self.keep = int(keep)
+        os.makedirs(directory, exist_ok=True)
+        self.publishes = 0
+
+    # ------------------------------------------------------------ paths
+    def path_for(self, version: int) -> str:
+        return os.path.join(self.dir, f"snapshot_{int(version)}.npz")
+
+    def _replace(self, tmp: str, dst: str) -> None:
+        os.replace(tmp, dst)        # atomic within one filesystem
+
+    # ---------------------------------------------------------- publish
+    def publish(self, estimator, version: int) -> str:
+        """Atomically publish ``estimator``'s full snapshot (serving
+        tuple + resumable carry) as ``version``.  Returns the path."""
+        dst = self.path_for(version)
+        tmp = dst + f".tmp.{os.getpid()}"
+        estimator.save(tmp)
+        self._replace(tmp, dst)
+        ptr = os.path.join(self.dir, "LATEST")
+        with open(ptr + f".tmp.{os.getpid()}", "w") as f:
+            json.dump({"version": int(version), "time": time.time()}, f)
+        self._replace(ptr + f".tmp.{os.getpid()}", ptr)
+        self.publishes += 1
+        self._prune()
+        return dst
+
+    def _prune(self) -> None:
+        versions = sorted(self.versions())
+        for v in versions[:-self.keep] if self.keep > 0 else []:
+            try:
+                os.remove(self.path_for(v))
+            except OSError:
+                pass
+
+    # ------------------------------------------------------------ reads
+    def versions(self) -> list:
+        out = []
+        for name in os.listdir(self.dir):
+            m = _SNAP_RE.match(name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_version(self) -> Optional[int]:
+        ptr = os.path.join(self.dir, "LATEST")
+        try:
+            with open(ptr) as f:
+                v = int(json.load(f)["version"])
+        except (OSError, ValueError, KeyError):
+            vs = self.versions()
+            return vs[-1] if vs else None
+        return v if os.path.exists(self.path_for(v)) else None
+
+    def age_s(self, version: Optional[int] = None) -> Optional[float]:
+        """Seconds since ``version`` (default: latest) was published."""
+        v = self.latest_version() if version is None else version
+        if v is None:
+            return None
+        try:
+            return max(0.0, time.time() - os.path.getmtime(self.path_for(v)))
+        except OSError:
+            return None
+
+    def load(self, version: Optional[int] = None,
+             max_age_s: Optional[float] = None):
+        """``(version, KernelKMeans)`` for ``version`` (default latest).
+        With ``max_age_s``, a snapshot older than the bound raises
+        :class:`StaleSnapshot` instead of loading."""
+        from repro.api import KernelKMeans
+
+        v = self.latest_version() if version is None else version
+        if v is None:
+            raise FileNotFoundError(f"no snapshot in {self.dir}")
+        if max_age_s is not None:
+            age = self.age_s(v)
+            if age is None or age > max_age_s:
+                raise StaleSnapshot(
+                    f"snapshot v{v} is {age if age is not None else '?'}s "
+                    f"old (bound {max_age_s}s)")
+        return v, KernelKMeans.load(self.path_for(v))
+
+    # ------------------------------- Checkpointer protocol (resilience)
+    def as_checkpointer(self, estimator) -> "_SnapshotCheckpointer":
+        """A :class:`repro.train.resilience.run_resilient`-compatible view
+        whose ``save(step, carry)`` publishes ``estimator``'s CURRENT
+        snapshot as version ``step`` and whose ``restore`` rehydrates the
+        saved :class:`FitCarry` — crash recovery restarts from exactly
+        what the actors are serving."""
+        return _SnapshotCheckpointer(self, estimator)
+
+
+class _SnapshotCheckpointer:
+    def __init__(self, store: SnapshotStore, estimator):
+        self.store = store
+        self.est = estimator
+
+    def wait(self) -> None:                 # publishes are synchronous
+        pass
+
+    def save(self, step: int, state: Any) -> None:
+        # `state` is the learner's carry — already inside self.est, which
+        # also holds the buffer snapshot the carry's indices refer to
+        self.store.publish(self.est, step)
+
+    def latest_step(self) -> Optional[int]:
+        return self.store.latest_version()
+
+    def restore(self, step: int, like: Any, shardings: Any = None):
+        from repro.api import KernelKMeans
+        from repro.api.executors import carry_of
+
+        loaded = KernelKMeans.load(self.store.path_for(step))
+        carry = carry_of(loaded._outcome)
+        if carry is None:
+            raise ValueError(f"snapshot v{step} carries no resumable "
+                             "FitCarry")
+        return _host_carry(carry)
+
+
+def _host_carry(carry):
+    """FitCarry with every array leaf materialized to host numpy — safe to
+    keep across donating ``partial_fit`` calls and to checkpoint."""
+    import jax
+
+    return type(carry)(
+        state=jax.tree.map(lambda a: np.asarray(a), carry.state),
+        key=np.asarray(carry.key), steps=carry.steps, iters=carry.iters)
