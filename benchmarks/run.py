@@ -40,6 +40,27 @@ from repro.data.graph_kernels import heat_kernel, knn_kernel
 GAUSS = Gaussian(kappa=jnp.float32(1.0))
 
 
+def bench_env(seed=0) -> dict:
+    """Shared provenance block embedded in every BENCH_*.json ``env`` key:
+    enough to tell two result files apart (code version, jax version,
+    backend/device, seed) without re-running anything."""
+    import os
+    import subprocess
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    try:
+        sha = subprocess.run(["git", "rev-parse", "HEAD"], cwd=here,
+                             capture_output=True, text=True,
+                             timeout=10).stdout.strip() or None
+    except Exception:                       # noqa: BLE001 — no git, no sha
+        sha = None
+    dev = jax.devices()[0]
+    return dict(git_sha=sha, jax_version=jax.__version__,
+                backend=jax.default_backend(),
+                device_kind=getattr(dev, "device_kind", str(dev)),
+                device_count=jax.device_count(), seed=int(seed))
+
+
 def _time_step(fn, iters=10, warmup=2):
     for _ in range(warmup):
         out = fn()
@@ -377,7 +398,12 @@ run_seq()                                            # compile
 t_seq = best_of(run_seq, REPS)
 
 speedup = t_seq / t_fused
+root = {root!r}
+import sys
+sys.path.insert(0, root)
+from benchmarks.run import bench_env
 out = dict(
+    env=bench_env(seed=0),
     workload=dict(n=4096, d=16, k=8, batch_size=128, tau=64, iters=ITERS,
                   restarts=R, devices=8,
                   fused_mesh=list(mesh.devices.shape),
@@ -385,7 +411,6 @@ out = dict(
     fused_ms=t_fused * 1e3, sequential_ms=t_seq * 1e3,
     speedup_x=speedup, plan="fused_restart_sharded",
     fused_faster=bool(t_fused < t_seq))
-root = {root!r}
 with open(os.path.join(root, "BENCH_fused_restarts.json"), "w") as f:
     json.dump(out, f, indent=2)
 print(f"fused_restarts_sequential_R{{R}},{{t_seq * 1e6:.0f}},"
@@ -507,6 +532,7 @@ def bench_kernel_cache(fast: bool):
     pred_ref = predict(st_c, x, xq, GAUSS)
     agree = float(jnp.mean((pred_ref == pred_c).astype(jnp.float32)))
     out = {
+        "env": bench_env(seed=0),
         "workload": dict(n=n, d=d, k=k, batch_size=b, tau=tau, iters=iters,
                          tile=tile, capacity=capacity,
                          queries=int(qidx.shape[0]), sampler="nested",
@@ -600,6 +626,7 @@ def bench_step_fuse(fast: bool):
     t_c, m_c = results["composed"]
     t_f, m_f = results["fused"]
     out = dict(
+        env=bench_env(seed=0),
         workload=dict(n=n, d=d, k=k, batch_size=b, tau=tau,
                       window=tau + b, reps=reps, fast=fast,
                       backend=jax.default_backend()),
@@ -816,6 +843,7 @@ def bench_service(fast: bool):
           f"pause={pause_ms:.0f}ms served_during={served_churn}")
 
     out = dict(
+        env=bench_env(seed=0),
         workload=dict(k=k, d=d, capacity=capacity, batch_size=b, tau=tau,
                       bucket=bucket, rounds=rounds, fast=fast,
                       backend=jax.default_backend()),
@@ -848,6 +876,145 @@ def bench_service(fast: bool):
     assert served_churn > 0, "serving stalled during snapshot churn"
 
 
+# --------------------------------------------------------------- landmark
+def bench_landmark(fast: bool):
+    """Landmark-compression gate (docs/compression.md): on an unbounded
+    stream (the ``grow_window`` no-eviction baseline, support never
+    truncated) serving cost grows linearly with fit history, while
+    round-cadence Nystrom compression pins it at O(k*m) — predict latency
+    must stay flat (<= 1.1x round 1) as the uncompressed arm's grows, and
+    the compressed objective on a held-out eval batch must stay within 5%
+    of the uncompressed run's.  Writes BENCH_landmark.json; asserted, so
+    CI gates on it.
+
+    Both arms run the SAME batch schedule from the SAME init; the only
+    difference is what happens between rounds: grow the window (baseline)
+    vs project onto m landmarks (compressed)."""
+    import json
+    import os
+
+    from repro.core.minibatch import assign_chunked, center_distances_chunked
+    from repro.landmark import CompressSpec, compress_state, grow_window
+
+    if fast:
+        n, d, k, b, tau = 8192, 16, 8, 128, 64
+        rounds, iters, m, grow, reps, nq = 10, 6, 32, 96, 8, 2048
+    else:
+        n, d, k, b, tau = 16384, 32, 16, 256, 128
+        rounds, iters, m, grow, reps, nq = 12, 8, 64, 192, 10, 4096
+
+    x, _ = blobs(n=n, d=d, k=k, seed=0)
+    x = jnp.asarray(x)
+    xe, _ = blobs(n=nq, d=d, k=k, seed=1)          # held-out eval batch
+    xe = jnp.asarray(xe)
+    w0 = window_size(b, tau)
+    init_idx = (jnp.arange(k, dtype=jnp.int32) * 31) % n
+    cfg = MBConfig(k=k, batch_size=b, tau=tau, max_iters=iters,
+                   epsilon=-1.0)
+    spec = CompressSpec(every=0, m=m)
+    key = jax.random.PRNGKey(42)
+    assign = jax.jit(assign_chunked, static_argnames=("chunk",))
+    dists = jax.jit(center_distances_chunked, static_argnames=("chunk",))
+
+    def run_round(st, rnd):
+        # both arms share this schedule; the step program is rebuilt per
+        # window width in the grown arm (learner-side cost, not timed)
+        step = jax.jit(make_step(GAUSS, cfg))
+        for i in range(iters):
+            bidx = sample_batch(jax.random.fold_in(key, rnd * iters + i),
+                                n, b)
+            st, _ = step(st, x, bidx)
+        return st
+
+    def time_rounds(servings):
+        """Per-round best-of-``reps`` predict latency (ms).  Reps are
+        INTERLEAVED round-robin across rounds so slow machine periods hit
+        every round equally — the per-round minima then reflect shape
+        cost, not when in the run a round happened to be timed."""
+        for coef, sqnorm, sup in servings:          # compile + warm all
+            jax.block_until_ready(assign(GAUSS, coef, sqnorm, sup, xe,
+                                         4096))
+        times = [[] for _ in servings]
+        for _ in range(reps):
+            for i, (coef, sqnorm, sup) in enumerate(servings):
+                t0 = time.perf_counter()
+                jax.block_until_ready(assign(GAUSS, coef, sqnorm, sup,
+                                             xe, 4096))
+                times[i].append(time.perf_counter() - t0)
+        return [min(t) * 1e3 for t in times]
+
+    def objective(coef, sqnorm, sup):
+        dd = dists(GAUSS, coef, sqnorm, sup, xe, 4096)
+        return float(jnp.mean(jnp.min(dd, axis=1)))
+
+    # ---- uncompressed arm: fit, then widen the window every round
+    st_u = init_state(x, init_idx, GAUSS, w0)
+    servings_u, rows_u = [], []
+    for rnd in range(rounds):
+        st_u = run_round(st_u, rnd)
+        sup = x[st_u.idx.reshape(-1)]
+        servings_u.append((st_u.coef, st_u.sqnorm, sup))
+        rows_u.append(int(sup.shape[0]))
+        if rnd < rounds - 1:
+            st_u = grow_window(st_u, grow)
+    obj_u = objective(*servings_u[-1])
+
+    # ---- compressed arm: same schedule at fixed W, project onto m
+    # landmarks every round and serve the O(k*m) representation
+    st_c = init_state(x, init_idx, GAUSS, w0)
+    servings_c, drifts = [], []
+    for rnd in range(rounds):
+        st_c = run_round(st_c, rnd)
+        st_c, info = compress_state(GAUSS, st_c, spec, x=x)
+        jax.block_until_ready(st_c.coef)
+        drifts.append(float(info.drift_bound))
+        # after compression only the first m slots are live — that slice
+        # IS the CompressedKernelCenters serving tuple
+        servings_c.append((st_c.coef[:, :m], st_c.sqnorm,
+                           x[st_c.idx[:, :m].reshape(-1)]))
+    obj_c = objective(*servings_c[-1])
+
+    lat_u = time_rounds(servings_u)
+    lat_c = time_rounds(servings_c)
+
+    growth_u = lat_u[-1] / lat_u[0]
+    growth_c = lat_c[-1] / lat_c[0]
+    obj_gap = abs(obj_c - obj_u) / max(abs(obj_u), 1e-12)
+    print(f"landmark_uncompressed,{lat_u[-1] * 1e3:.0f},"
+          f"{growth_u:.2f}x_round1 rows={rows_u[0]}->{rows_u[-1]}")
+    print(f"landmark_compressed,{lat_c[-1] * 1e3:.0f},"
+          f"{growth_c:.2f}x_round1 rows={k * m} m={m}")
+    print(f"landmark_objective,,gap={obj_gap:.4f} "
+          f"drift_bound={max(drifts):.3f}")
+
+    out = dict(
+        env=bench_env(seed=42),
+        workload=dict(n=n, d=d, k=k, batch_size=b, tau=tau, window=w0,
+                      rounds=rounds, iters_per_round=iters, m=m,
+                      grow_per_round=grow, eval_rows=nq, reps=reps,
+                      fast=fast),
+        uncompressed=dict(predict_ms=lat_u, support_rows=rows_u,
+                          latency_growth_x=growth_u, objective=obj_u),
+        compressed=dict(predict_ms=lat_c, support_rows=k * m,
+                        latency_growth_x=growth_c, objective=obj_c,
+                        drift_bounds=drifts),
+        objective_gap=obj_gap,
+        compression_ratio=m / (w0 + (rounds - 1) * grow))
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with open(os.path.join(root, "BENCH_landmark.json"), "w") as f:
+        json.dump(out, f, indent=2)
+
+    assert growth_c <= 1.1, (
+        f"compressed predict latency grew {growth_c:.2f}x over "
+        f"{rounds} rounds (must stay flat <= 1.1x round 1)")
+    assert growth_u > 1.1, (
+        f"uncompressed baseline only grew {growth_u:.2f}x — the no-"
+        f"eviction arm is not exercising unbounded support growth")
+    assert obj_gap <= 0.05, (
+        f"compressed objective {obj_c:.4f} deviates {obj_gap:.1%} from "
+        f"uncompressed {obj_u:.4f} on the held-out batch (> 5%)")
+
+
 BENCHES = {
     "speedup": bench_speedup,
     "multi_restart": bench_multi_restart,
@@ -856,6 +1023,7 @@ BENCHES = {
     "step_fuse": bench_step_fuse,
     "api_overhead": bench_api_overhead,
     "service": bench_service,
+    "landmark": bench_landmark,
     "n_independence": bench_n_independence,
     "quality": bench_quality,
     "tau_sweep": bench_tau_sweep,

@@ -102,6 +102,16 @@ class SolverConfig:
     eval_batch_size: Optional[int] = None
     share_eval_gram: Optional[bool] = None
 
+    # ---- landmark compression axis (docs/compression.md) ----------------
+    # "off" (serving identical to historical), or a mapping like
+    # {"every": T, "m": m, "selector": "uniform"|"leverage",
+    #  "jitter": 1e-6}: every T-th fit iteration projects each center's
+    # support window onto m landmark rows in place (every=0: no in-loop
+    # hook — round-cadence / explicit ``KernelKMeans.compress`` only).
+    # Orthogonal to every other axis — resolved into MBConfig, so all
+    # executors honor it through the same step factories.
+    compress: Any = "off"
+
     def __post_init__(self):
         if self.cache not in _CACHE_VALUES:
             raise ValueError(f"cache={self.cache!r} not in {_CACHE_VALUES}")
@@ -127,6 +137,22 @@ class SolverConfig:
             kp = tuple(sorted(dict(kp).items()))
         object.__setattr__(self, "kernel_params", kp)
         object.__setattr__(self, "data_axes", tuple(self.data_axes))
+        # normalize + validate the compress axis (mappings and the
+        # list-of-pairs shape JSON round-trips produce both normalize to a
+        # hashable sorted item-tuple; spec_of re-validates values)
+        from repro.landmark.compress import spec_of
+        spec = spec_of(self.compress)   # raises on malformed values
+        if spec is None:
+            object.__setattr__(self, "compress", "off")
+        else:
+            from repro.core.state import window_size
+            w = window_size(self.batch_size, self.tau)
+            if spec.m > w:
+                raise ValueError(
+                    f"compress m={spec.m} exceeds the support window "
+                    f"W=tau+batch_size={w}")
+            object.__setattr__(self, "compress",
+                               tuple(sorted(spec._asdict().items())))
 
     # ------------------------------------------------------------------ --
     def replace(self, **changes) -> "SolverConfig":
@@ -153,13 +179,23 @@ class SolverConfig:
         (``bf16`` -> bfloat16 coordinates, f32 accumulation); ``step``
         resolves through :meth:`resolved_step`."""
         cdt = "bfloat16" if self.precision == "bf16" else self.compute_dtype
+        spec = self.compress_spec()
+        if spec is not None and spec.every <= 0:
+            spec = None   # round-cadence-only mode: no in-loop hook
         return MBConfig(k=self.k, batch_size=self.batch_size, tau=self.tau,
                         rate=self.rate, sqnorm_mode=self.sqnorm_mode,
                         eval_mode=self.eval_mode, epsilon=self.epsilon,
                         max_iters=self.max_iters,
                         use_pallas=self.use_pallas,
                         compute_dtype=cdt,
-                        step=self.resolved_step())
+                        step=self.resolved_step(),
+                        compress=spec)
+
+    def compress_spec(self):
+        """The compress axis as a :class:`repro.landmark.compress
+        .CompressSpec`, or None for ``"off"``."""
+        from repro.landmark.compress import spec_of
+        return spec_of(self.compress)
 
     def make_kernel_fn(self) -> KernelFn:
         """Resolve the kernel axis to an actual kernel pytree (registry

@@ -71,6 +71,10 @@ class KernelKMeans:
         self.iters_ = None
         self.cache_ = None
         self.result_ = None
+        # landmark-compression counters (docs/compression.md): cumulative
+        # across the estimator's life, survive save()/load()
+        self._compress_stats = {"compressions": 0, "m": None,
+                                "last_drift": None, "ratio": None}
 
     # ------------------------------------------------------------- plans
     def plan_for(self, n: int):
@@ -196,6 +200,62 @@ class KernelKMeans:
     def fit_predict(self, X, key: Any = 0, **kw):
         return self.fit(X, key, **kw).predict(X)
 
+    # ----------------------------------------------- landmark compression
+    def compress(self, m: Optional[int] = None,
+                 selector: Optional[str] = None,
+                 jitter: Optional[float] = None) -> "KernelKMeans":
+        """Project the SERVING representation onto ``m`` landmark rows per
+        center (:class:`repro.landmark.serving.CompressedKernelCenters`):
+        predict/transform/score afterwards cost O(k*m) per query and never
+        touch the original support window.  Defaults come from the
+        ``compress`` config axis.  The resumable fit carry is untouched —
+        ``partial_fit`` keeps full fidelity and re-derives fresh serving
+        state (compress again after it for bounded serving; the service
+        Learner does exactly that each round).  Landmark selection is
+        keyed by the fit step counter, so a crash-recovered learner
+        reproduces the same compressed model bit-for-bit."""
+        from repro.landmark.compress import CompressSpec
+        from repro.landmark.serving import CompressedKernelCenters
+
+        spec = self.config.compress_spec()
+        if spec is None:
+            spec = CompressSpec()
+        if m is not None:
+            spec = spec._replace(m=int(m))
+        if selector is not None:
+            spec = spec._replace(selector=selector)
+        if jitter is not None:
+            spec = spec._replace(jitter=float(jitter))
+        kern, sup, coef, sqnorm = self._serving_tuple()
+        k, w = coef.shape
+        if spec.m >= w:
+            return self   # already at/below the target support size
+        step = self.state_.step if self.state_ is not None else \
+            self._compress_stats["compressions"]
+        ckc, info = CompressedKernelCenters.from_serving(
+            kern, sup, coef, sqnorm, spec=spec._replace(every=0), step=step)
+        self._serving = ckc.serving_tuple()
+        st = self._compress_stats
+        st["compressions"] += 1
+        st["m"] = spec.m
+        st["last_drift"] = float(info.drift_bound)
+        st["ratio"] = spec.m / w
+        return self
+
+    def support_stats(self) -> Optional[dict]:
+        """Live serving-support telemetry (present even with
+        ``compress="off"``): total support rows, active (coef != 0) rows,
+        the per-center window W, and the compression counters.  ``None``
+        before fit()/load()."""
+        if self._serving is None and self._outcome is None:
+            return None
+        _, sup, coef, _ = self._serving_tuple()
+        coef = np.asarray(coef)
+        k, w = coef.shape
+        return {"rows": int(sup.shape[0]), "active":
+                int(np.count_nonzero(coef)), "window": int(w), "k": int(k),
+                **self._compress_stats}
+
     # ---------------------------------------------------- snapshot hooks
     # The serving split (repro.service) drives a long-lived estimator from
     # learner threads: it needs the resumable carry as HOST arrays (the
@@ -259,9 +319,15 @@ class KernelKMeans:
         states)."""
         kern, sup, coef, sqnorm = self._serving_tuple()
         name, params = kernel_spec(kern)
-        meta = {"kernel": name, "kernel_params": params,
+        # format 2 (the compressed-representation bump): adds "format" and
+        # "compress" meta keys; the serving arrays may be a landmark-
+        # compressed (k*m)-row representation while the carry arrays stay
+        # the full resumable window.  load() still accepts format-1 files
+        # (no "format" key) unchanged — see tests/test_save_load_skew.py.
+        meta = {"format": 2, "kernel": name, "kernel_params": params,
                 "config": {f: getattr(self.config, f)
-                           for f in _JSON_FIELDS}}
+                           for f in _JSON_FIELDS},
+                "compress": self._compress_stats}
         arrays = dict(sup=np.asarray(sup), coef=np.asarray(coef),
                       sqnorm=np.asarray(sqnorm))
         # resumable iff the plan supports partial_fit; an estimator that
@@ -304,10 +370,16 @@ class KernelKMeans:
                                  key=jnp.asarray(data["carry_key"]),
                                  steps=cmeta["steps"],
                                  iters=cmeta["iters"])
+        fmt = meta.get("format", 1)   # pre-compression files carry no key
+        if fmt > 2:
+            raise ValueError(f"snapshot format {fmt} is newer than this "
+                             "build understands (<= 2)")
         cfg_dict = dict(meta["config"])
         cfg_dict["kernel"] = meta["kernel"]
         cfg_dict["kernel_params"] = meta["kernel_params"]
         est = cls(SolverConfig(**cfg_dict))
+        if fmt >= 2 and meta.get("compress"):
+            est._compress_stats.update(meta["compress"])
         est._serving = (make_kernel(meta["kernel"],
                                     **meta["kernel_params"]),
                         sup, coef, sqnorm)

@@ -30,7 +30,8 @@ import jax.numpy as jnp
 from repro.cache import tile_cache
 from repro.cache.tile_cache import GramTileCache
 from repro.core.kernel_fns import (
-    KernelFn, diag_is_one, diag_of, kernel_diag, register_kernel,
+    KernelFn, diag_is_one, diag_of, gram_rows_fn, kernel_diag,
+    register_kernel,
 )
 
 
@@ -99,6 +100,24 @@ def cross_rows_readonly(ck: CachedKernel, xi: jax.Array) -> jax.Array:
     out, _ = tile_cache.lookup_rows(ck.cache, ck.base, ck.x,
                                     _row_ids(xi), None, insert=False)
     return out
+
+
+def window_grams(kernel: KernelFn, pts: jax.Array) -> jax.Array:
+    """Per-center window Grams K(win_j, win_j), (k, W, W), for any kernel
+    advertising the ``gram_rows`` capability; ``pts`` is the (k, W, 1)
+    index-data window.  ALL k*W support strips resolve in ONE read-through
+    lookup (warm after the fit loop's ``warm_rows`` prologue), then each
+    center's block is a pure column gather from its own strips — the
+    landmark compressor's K_mW / K_mm / leverage-score assembly path
+    (:mod:`repro.landmark.compress`)."""
+    k, w, _ = pts.shape
+    rows_fn = gram_rows_fn(kernel)
+    if rows_fn is None:
+        raise TypeError(f"{type(kernel).__name__} does not advertise "
+                        "gram_rows; evaluate window Grams directly")
+    rows = rows_fn(kernel, pts.reshape(k * w, -1)).astype(jnp.float32)
+    ids = pts[..., 0].astype(jnp.int32)                        # (k, W)
+    return jax.vmap(lambda r, i: r[:, i])(rows.reshape(k, w, -1), ids)
 
 
 def _diag(ck: CachedKernel, xi: jax.Array) -> jax.Array:

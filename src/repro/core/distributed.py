@@ -339,6 +339,12 @@ def _make_local_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
                               step=state.step + 1)
         return new_state, DistInfo(f_before, f_after, f_before - f_after, bj)
 
+    if cfg.compress is not None and cfg.compress.every > 0:
+        # in-loop landmark projection of the shard-local center windows
+        # (fully center-local — zero collectives); compress=None emits the
+        # historical program unchanged
+        from repro.landmark.compress import wrap_local_step
+        return wrap_local_step(local_step, kernel, cfg.compress, model_axis)
     return local_step
 
 

@@ -48,6 +48,11 @@ class MBConfig(NamedTuple):
     step: str = "composed"          # 'fused': streaming one-pass step
     #   (repro.kernels.fused_step; online argmin, no (b, kW) strip in HBM;
     #   bit-identical to 'composed' at f32 — see docs/perf.md)
+    compress: Optional[tuple] = None  # landmark CompressSpec (hashable) —
+    #   every compress.every-th iteration ends with an in-place Nystrom
+    #   projection of every window onto compress.m landmark rows
+    #   (repro.landmark.compress; None emits the historical program
+    #   unchanged — docs/compression.md)
 
 
 class StepInfo(NamedTuple):
@@ -251,14 +256,29 @@ def _make_fused_step(kernel: KernelFn, cfg: MBConfig):
     return step
 
 
+def _maybe_compress(step, kernel: KernelFn, cfg: MBConfig):
+    """Wrap a step with the in-loop landmark projection when the config
+    carries an active compress spec.  ``compress=None`` (and ``every=0``,
+    the round-cadence-only mode) return ``step`` itself — the emitted
+    program is the historical one, bit-for-bit (the ``cdt=None`` identity
+    convention)."""
+    spec = cfg.compress
+    if spec is None or spec.every <= 0:
+        return step
+    from repro.landmark.compress import wrap_step
+    return wrap_step(step, kernel, spec)
+
+
 def make_step(kernel: KernelFn, cfg: MBConfig):
     """Returns step(state, x, batch_idx) -> (state, StepInfo): one Algorithm-2
     iteration.  Pure; jit/shard_map-able; x passed explicitly (never a baked
     constant).  ``cfg.step`` selects the implementation: 'composed' (the
     historical op chain below) or 'fused' (:func:`_make_fused_step` —
-    streaming passes, bit-identical at f32)."""
+    streaming passes, bit-identical at f32).  An active ``cfg.compress``
+    spec lands on BOTH implementations here (:func:`_maybe_compress`), so
+    every CenterState executor gets in-loop compression for free."""
     if cfg.step == "fused":
-        return _make_fused_step(kernel, cfg)
+        return _maybe_compress(_make_fused_step(kernel, cfg), kernel, cfg)
     if cfg.step != "composed":
         raise ValueError(f"step={cfg.step!r} (expected 'composed' or "
                          "'fused')")
@@ -364,7 +384,7 @@ def make_step(kernel: KernelFn, cfg: MBConfig):
                         batch_counts=bj, assignments=assign)
         return new_state, info
 
-    return step
+    return _maybe_compress(step, kernel, cfg)
 
 
 def batch_objective(kernel: KernelFn, state: CenterState, x: jax.Array,

@@ -1,0 +1,26 @@
+"""Landmark compression subsystem (docs/compression.md).
+
+Nystrom-projects truncated-center support windows onto m landmark rows so
+serving cost is O(k * m) regardless of fit history — the ``compress``
+axis of :class:`repro.api.SolverConfig` and the bounded-memory mode of
+the always-on service.
+"""
+from repro.landmark.basis import (
+    LandmarkBasis, jittered_solve, ridge_leverage_scores, select_rows,
+    whitening_factor,
+)
+from repro.landmark.compress import (
+    CompressInfo, CompressSpec, compress_center_state, compress_dist_state,
+    compress_state, compress_windows, grow_window, spec_of, wrap_local_step,
+    wrap_step,
+)
+from repro.landmark.serving import CompressedKernelCenters
+
+__all__ = [
+    "LandmarkBasis", "jittered_solve", "ridge_leverage_scores",
+    "select_rows", "whitening_factor",
+    "CompressInfo", "CompressSpec", "compress_center_state",
+    "compress_dist_state", "compress_state", "compress_windows",
+    "grow_window", "spec_of", "wrap_local_step", "wrap_step",
+    "CompressedKernelCenters",
+]

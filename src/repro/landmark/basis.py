@@ -1,0 +1,163 @@
+"""Landmark selection + Nyström projection — the numerical core of the
+compression subsystem (docs/compression.md).
+
+A set of m landmark rows Z spans an m-dimensional subspace
+span{phi(z_1), ..., phi(z_m)} of the RKHS.  Projecting any element
+C = sum_i c_i phi(x_i) onto that subspace is the normal-equation solve
+
+    K_mm beta = K_mZ→support c        (beta = argmin ||C - sum beta_i phi(z_i)||)
+
+and the orthonormalized feature map (the EigenPro-style subsampled
+spectral basis, SNIPPETS.md snippets 1-2) is
+
+    psi(x) = K_mm^{-1/2} K(Z, x).
+
+Both factor through one jittered symmetric solve of K_mm: Cholesky when it
+succeeds, a clipped-eigenvalue ``eigh`` fallback when the (numerically
+rank-deficient) landmark Gram defeats it.  Everything here is pure jnp —
+vmap/shard_map/jit-safe, so the same ops run inside a compiled while_loop
+(the in-loop ``compress`` axis) and on the host (``KernelKMeans.compress``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernel_fns import KernelFn, diag_of, kernel_cross
+
+_SELECTORS = ("uniform", "leverage")
+
+
+def jittered_solve(kmm: jax.Array, rhs: jax.Array,
+                   jitter: float) -> jax.Array:
+    """Solve ``(K_mm + jitter * scale * I) beta = rhs`` for a symmetric
+    PSD ``kmm``.  The jitter is RELATIVE (scaled by the mean diagonal),
+    so one setting works across kernel magnitudes.  Cholesky is attempted
+    first; entries that come back non-finite (a rank-deficient or
+    duplicated landmark set) are replaced by the clipped-``eigh`` solve —
+    both candidates are cheap at landmark sizes, and the ``where``-select
+    keeps the op vmap-safe (no data-dependent control flow)."""
+    m = kmm.shape[-1]
+    kmm = kmm.astype(jnp.float32)
+    rhs = rhs.astype(jnp.float32)
+    scale = jnp.maximum(jnp.trace(kmm) / m, 1e-12)
+    a = kmm + (jitter * scale) * jnp.eye(m, dtype=jnp.float32)
+    chol = jnp.linalg.cholesky(a)
+    y = jax.scipy.linalg.solve_triangular(chol, rhs, lower=True)
+    beta_c = jax.scipy.linalg.solve_triangular(chol.T, y, lower=False)
+    evals, evecs = jnp.linalg.eigh(a)
+    evals = jnp.maximum(evals, jitter * scale)
+    beta_e = evecs @ ((evecs.T @ rhs) / evals)
+    ok = jnp.all(jnp.isfinite(beta_c))
+    return jnp.where(ok, beta_c, beta_e)
+
+
+def whitening_factor(kmm: jax.Array, jitter: float):
+    """``(evals, evecs)`` of the jittered landmark Gram with eigenvalues
+    clipped from below — ``K_mm^{-1/2} v = evecs diag(evals^{-1/2})
+    evecs^T v`` is then always well defined (the Nyström feature map)."""
+    m = kmm.shape[-1]
+    kmm = kmm.astype(jnp.float32)
+    scale = jnp.maximum(jnp.trace(kmm) / m, 1e-12)
+    a = kmm + (jitter * scale) * jnp.eye(m, dtype=jnp.float32)
+    evals, evecs = jnp.linalg.eigh(a)
+    return jnp.maximum(evals, jitter * scale), evecs
+
+
+def ridge_leverage_scores(gram: jax.Array, lam: jax.Array) -> jax.Array:
+    """diag(G (G + lam I)^{-1}) for a symmetric PSD ``gram`` — the ridge
+    leverage score of every candidate row, via ``eigh`` (robust to the
+    rank deficiency a window Gram with duplicated support rows has)."""
+    evals, evecs = jnp.linalg.eigh(gram.astype(jnp.float32))
+    evals = jnp.maximum(evals, 0.0)
+    w = evals / (evals + lam)
+    return jnp.einsum("ia,a,ia->i", evecs, w, evecs)
+
+
+def select_rows(key: Optional[jax.Array], gram_or_none, mask: jax.Array,
+                m: int, selector: str, jitter: float) -> jax.Array:
+    """Pick ``m`` candidate row indices (static shape) out of the rows
+    where ``mask`` is True.
+
+    ``selector='uniform'``: Gumbel-top-m over the masked rows — a uniform
+    draw without replacement, pure in ``key``.  ``'leverage'``: top-m by
+    ridge leverage score of the candidate Gram (``gram_or_none`` must be
+    the (c, c) candidate Gram) — deterministic, the leverage-score-sketch
+    selector.  Fewer than m active rows: the masked (score -inf) rows
+    fill the tail; their zero coefficients keep them inert downstream."""
+    if selector == "uniform":
+        if key is None:
+            raise ValueError("selector='uniform' needs a PRNG key")
+        scores = jax.random.gumbel(key, mask.shape, jnp.float32)
+    elif selector == "leverage":
+        c = mask.shape[0]
+        g = jnp.where(mask[:, None] & mask[None, :], gram_or_none, 0.0)
+        lam = jnp.maximum(jitter * jnp.trace(g) / c, 1e-12)
+        scores = ridge_leverage_scores(g, lam)
+    else:
+        raise ValueError(f"selector={selector!r} not in {_SELECTORS}")
+    scores = jnp.where(mask, scores, -jnp.inf)
+    _, sel = jax.lax.top_k(scores, m)
+    return sel.astype(jnp.int32)
+
+
+class LandmarkBasis(NamedTuple):
+    """A fitted landmark basis: the m landmark rows plus the spectral
+    factorization of their (jittered) Gram.  Standalone entry point of
+    the subsystem — :func:`repro.landmark.compress.compress_state` uses
+    the same selection/solve primitives per center; this class is the
+    reusable piece for EigenPro-style sibling estimators (features /
+    project over an explicit candidate pool)."""
+
+    kernel: KernelFn
+    z: jax.Array        # (m, d) landmark rows (or (m, 1) index data)
+    evals: jax.Array    # (m,)  clipped eigenvalues of the jittered K_mm
+    evecs: jax.Array    # (m, m)
+
+    @classmethod
+    def build(cls, kernel: KernelFn, candidates: jax.Array, m: int, *,
+              selector: str = "uniform", key: Optional[jax.Array] = None,
+              weights: Optional[jax.Array] = None,
+              jitter: float = 1e-6) -> "LandmarkBasis":
+        """Select m landmarks from ``candidates`` (c, d) and factor their
+        Gram.  ``weights`` (c,) marks active candidates (> 0); by default
+        all rows are candidates.  ``selector='leverage'`` computes the
+        candidate Gram once — for cached/precomputed kernels that is a
+        Gram-strip gather, not a kernel evaluation."""
+        c = candidates.shape[0]
+        if not 1 <= m <= c:
+            raise ValueError(f"m={m} not in [1, {c}]")
+        mask = jnp.ones((c,), bool) if weights is None else (weights != 0)
+        gram = None
+        if selector == "leverage":
+            gram = kernel_cross(kernel, candidates, candidates) \
+                .astype(jnp.float32)
+        sel = select_rows(key, gram, mask, m, selector, jitter)
+        z = candidates[sel]
+        kmm = (gram[sel][:, sel] if gram is not None
+               else kernel_cross(kernel, z, z).astype(jnp.float32))
+        evals, evecs = whitening_factor(kmm, jitter)
+        return cls(kernel=kernel, z=z, evals=evals, evecs=evecs)
+
+    # ------------------------------------------------------------ queries
+    def features(self, x: jax.Array) -> jax.Array:
+        """Nyström feature map ``psi(x) = K_mm^{-1/2} K(Z, x)`` — (nq, m)
+        rows whose inner products approximate the kernel."""
+        cross = kernel_cross(self.kernel, x, self.z).astype(jnp.float32)
+        half = self.evecs * jax.lax.rsqrt(self.evals)[None, :]
+        return cross @ (half @ self.evecs.T).T
+
+    def project_coef(self, support: jax.Array,
+                     coef: jax.Array) -> jax.Array:
+        """Projection coefficients beta (m,) of ``sum_i coef_i
+        phi(support_i)`` onto the landmark span: the normal-equation solve
+        ``K_mm beta = K(Z, support) coef`` through the stored factor."""
+        kms = kernel_cross(self.kernel, self.z, support).astype(jnp.float32)
+        rhs = kms @ coef.astype(jnp.float32)
+        return self.evecs @ ((self.evecs.T @ rhs) / self.evals)
+
+    def max_feature_norm(self, x: jax.Array) -> jax.Array:
+        """max_i ||phi(x_i)|| over rows — the gamma of the drift bound."""
+        return jnp.sqrt(jnp.max(diag_of(self.kernel, x)))

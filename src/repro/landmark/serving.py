@@ -1,0 +1,97 @@
+"""``CompressedKernelCenters`` — the bounded-cost serving representation.
+
+A compressed model is k centers, each a beta-weighted combination of its
+own m landmark rows: predict / transform / score cost O(k * m) per query
+point, independent of how many ``partial_fit`` rounds produced it, and
+the original support window is never touched again (it can be dropped,
+archived, or kept only as the learner's resumable carry).
+
+Serving reuses the SAME chunked kernels as the uncompressed path
+(:func:`repro.core.minibatch.assign_chunked` /
+:func:`center_distances_chunked`): the landmark rows flatten to a
+(k * m, d) support array and the (k, m) beta matrix plays the coef role,
+so the Actor's bucket / bit-exactness machinery serves compressed and
+uncompressed models through one compiled program family.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernel_fns import KernelFn
+from repro.landmark.compress import (
+    CompressInfo, CompressSpec, compress_windows, spec_of,
+)
+
+
+class CompressedKernelCenters(NamedTuple):
+    """k Nystrom-projected centers over per-center landmark rows."""
+
+    kernel: KernelFn
+    landmarks: jax.Array  # (k, m, d) rows (or (k, m, 1) index data)
+    coef: jax.Array       # (k, m) projection coefficients beta
+    sqnorm: jax.Array     # (k,) ||C~_j||^2
+
+    @classmethod
+    def from_serving(cls, kernel: KernelFn, sup: jax.Array,
+                     coef: jax.Array, sqnorm: jax.Array, *,
+                     spec=None, m: Optional[int] = None,
+                     selector: str = "uniform", jitter: float = 1e-6,
+                     step=0) -> Tuple["CompressedKernelCenters",
+                                      CompressInfo]:
+        """Compress a standard serving tuple — ``sup`` (k*W, d) support
+        rows, ``coef`` (k, W), ``sqnorm`` (k,) — onto m landmarks per
+        center.  ``step`` keys the (deterministic) uniform selection, so
+        replaying the same fit history reproduces the same model
+        bit-for-bit.  Returns ``(compressed, CompressInfo)``."""
+        if spec is None:
+            if m is None:
+                raise ValueError("from_serving needs spec= or m=")
+            spec = CompressSpec(every=0, m=int(m), selector=selector,
+                                jitter=jitter)
+        else:
+            spec = spec_of(spec)
+        k, w = coef.shape
+        pts = sup.reshape(k, w, -1)
+        step = jnp.asarray(step, jnp.int32)
+        sel, beta, csq, info = compress_windows(
+            kernel, pts, jnp.asarray(coef), jnp.asarray(sqnorm), step, spec)
+        lm = jnp.take_along_axis(pts, sel[..., None], axis=1)
+        return cls(kernel=kernel, landmarks=lm, coef=beta,
+                   sqnorm=csq), info
+
+    # --------------------------------------------------------------- shape
+    @property
+    def k(self) -> int:
+        return self.coef.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.coef.shape[1]
+
+    def serving_tuple(self):
+        """``(kernel, sup (k*m, d), coef (k, m), sqnorm (k,))`` — the
+        exact contract of ``KernelKMeans._serving_tuple`` / the Actor."""
+        km = self.k * self.m
+        return (self.kernel, self.landmarks.reshape(km, -1), self.coef,
+                self.sqnorm)
+
+    # ------------------------------------------------------------- queries
+    def predict(self, xq: jax.Array, chunk: int = 4096) -> jax.Array:
+        from repro.core.minibatch import assign_chunked
+        kern, sup, coef, sqnorm = self.serving_tuple()
+        return assign_chunked(kern, coef, sqnorm, sup, jnp.asarray(xq),
+                              chunk)
+
+    def transform(self, xq: jax.Array, chunk: int = 4096) -> jax.Array:
+        from repro.core.minibatch import center_distances_chunked
+        kern, sup, coef, sqnorm = self.serving_tuple()
+        return center_distances_chunked(kern, coef, sqnorm, sup,
+                                        jnp.asarray(xq), chunk)
+
+    def score(self, xq: jax.Array) -> float:
+        """Negative mean min squared feature-space distance (sklearn
+        convention, matching ``KernelKMeans.score``)."""
+        return -float(jnp.mean(jnp.min(self.transform(xq), axis=1)))

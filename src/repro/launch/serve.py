@@ -225,6 +225,10 @@ def serve_service(args):
     final summary."""
     from repro.service.demo import run_demo
 
+    compress = "off"
+    if args.compress_m:
+        compress = {"m": args.compress_m, "every": args.compress_every,
+                    "selector": args.compress_selector}
     t = run_demo(rounds=args.rounds, requests=args.requests,
                  request_rows=args.request_rows, seed=args.seed,
                  k=args.k, d=args.d, capacity=args.buffer_capacity,
@@ -233,7 +237,7 @@ def serve_service(args):
                  publish_every=args.publish_every,
                  buffer_mode=args.buffer_mode,
                  arrivals_per_step=args.arrivals_per_step,
-                 log_every=args.publish_every)
+                 log_every=args.publish_every, compress=compress)
     demo = t["demo"]
     lat = t["latency_ms"]
     print(f"service: served {demo['served']} requests "
@@ -243,6 +247,11 @@ def serve_service(args):
     print(f"service: p50 {lat['p50']:.2f} ms, p99 {lat['p99']:.2f} ms, "
           f"serve compiles {t['programs']['serve_compiles']}, "
           f"fit builds {t['programs']['fit_builds']}")
+    sup = t.get("support")
+    if sup:
+        print(f"service: support rows={sup['rows']} (window W="
+              f"{sup['window']}), compressions={sup['compressions']}, "
+              f"m={sup['m']}, drift={sup['last_drift']}")
 
 
 def main():
@@ -292,6 +301,16 @@ def main():
     ap.add_argument("--arrivals-per-step", type=int, default=512)
     ap.add_argument("--iters-per-round", type=int, default=4)
     ap.add_argument("--publish-every", type=int, default=4)
+    # landmark compression (docs/compression.md)
+    ap.add_argument("--compress-m", type=int, default=0,
+                    help="landmark count m per center: > 0 enables "
+                         "round-cadence compression in the --service "
+                         "learner (serving cost O(k*m), flat in rounds)")
+    ap.add_argument("--compress-every", type=int, default=0,
+                    help="additionally compress in-loop every N fit "
+                         "iterations (0: round cadence only)")
+    ap.add_argument("--compress-selector", choices=["uniform", "leverage"],
+                    default="uniform")
     args = ap.parse_args()
 
     if args.service:

@@ -109,6 +109,7 @@ class Actor:
             maxsize=int(queue_depth))
         self._model_lock = threading.Lock()
         self._model = None                # (version, serving tuple)
+        self._support = None              # support_stats() of served model
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
@@ -185,6 +186,7 @@ class Actor:
         self._warm(serving, int(np.asarray(serving[1]).shape[-1]))
         with self._model_lock:
             self._model = (v, serving)
+            self._support = est.support_stats()
         self.stale = False
         self.swaps += 1
         self.last_swap_pause_ms = (time.perf_counter() - t0) * 1e3
@@ -336,3 +338,8 @@ class Actor:
                     swaps=self.swaps,
                     last_swap_pause_ms=self.last_swap_pause_ms,
                     stale=self.stale)
+
+    def support_stats(self) -> Optional[dict]:
+        """Support-size / compression counters of the SERVED model (the
+        last swapped-in snapshot) — ``None`` before the first swap."""
+        return self._support

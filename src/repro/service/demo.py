@@ -45,15 +45,19 @@ def build_service(snapshot_dir: str, *, k: int = 8, d: int = 16,
                   arrivals_per_step: int = 512, seed: int = 0,
                   buckets=(64, 256, 1024), queue_depth: int = 256,
                   max_wait_ms: float = 2.0, max_staleness_s=None,
-                  log_every: int = 0):
-    """Wire (learner, actor, store, buffer, source) — unstarted."""
+                  log_every: int = 0, compress="off"):
+    """Wire (learner, actor, store, buffer, source) — unstarted.
+    ``compress``: the SolverConfig landmark axis — e.g. ``{"m": 32}``
+    makes the learner compress every round, so all published snapshots
+    serve at O(k*m) (docs/compression.md)."""
     from repro.api import KernelKMeans, SolverConfig
 
     cfg = SolverConfig(k=k, batch_size=batch_size, tau=tau,
                        max_iters=iters_per_round, epsilon=-1.0,
                        early_stop=False, kernel="rbf",
                        kernel_params={"kappa": 1.0}, cache="none",
-                       distribution="single", jit=True)
+                       distribution="single", jit=True,
+                       compress=compress)
     est = KernelKMeans(cfg)
     store = SnapshotStore(snapshot_dir)
     buf = IngestBuffer(capacity, d, seed=seed, mode=buffer_mode)

@@ -105,6 +105,14 @@ class Learner:
         else:
             self.est.restore_carry(carry)
             self.est.partial_fit(xbuf, iters=self.iters_per_round)
+        if self.est.config.compress != "off":
+            # round-cadence landmark compression: every published snapshot
+            # carries the O(k*m) serving representation (stable serving
+            # shapes across swaps -> zero actor recompiles), while the
+            # resumable carry stays the full window.  Selection is keyed
+            # by the carried step counter, so a crash-recovered learner
+            # republishes bit-identical compressed models.
+            self.est.compress()
         if self.on_round is not None:
             self.on_round(self.rounds)
         self.rounds += 1

@@ -13,7 +13,16 @@ path all report the same way:
       "snapshot": {version, age_s, swaps, last_swap_pause_ms, stale},
       "latency_ms": {p50, p99, count},
       "learner":  {rounds, publishes, restores, last_improvement},
+      "support":  {rows, active, window, k, compressions, m, last_drift,
+                   ratio},
     }
+
+The ``support`` section is the serving-cost gauge (docs/compression.md):
+``rows`` is the live center-support size W*k the serving path pays per
+query — reported whenever a learner or a swapped-in actor model exists,
+even with ``compress="off"`` (that is how an operator notices unbounded
+growth); the compression counters are populated once the landmark axis is
+active.
 
 Sections for components you did not pass are ``None`` — consumers key on
 presence, not on argument plumbing.  ``fit_builds`` is always present: it
@@ -30,7 +39,7 @@ from typing import Optional
 import numpy as np
 
 _SECTIONS = ("programs", "cache", "ingest", "queue", "snapshot",
-             "latency_ms", "learner")
+             "latency_ms", "learner", "support")
 
 
 class LatencyWindow:
@@ -110,6 +119,11 @@ def poll(*, buffer=None, learner=None, actor=None, cache=None) -> dict:
         out["queue"] = actor.queue_stats()
         out["snapshot"] = actor.snapshot_stats()
         out["latency_ms"] = actor.latency.percentiles()
+    # live learner support beats the actor's (possibly stale) snapshot view
+    if learner is not None and getattr(learner, "est", None) is not None:
+        out["support"] = learner.est.support_stats()
+    if out["support"] is None and actor is not None:
+        out["support"] = actor.support_stats()
     return out
 
 
@@ -146,6 +160,15 @@ def format_line(t: dict) -> str:
     if lat:
         parts.append(f"lat p50={_fmt(lat['p50'])}ms "
                      f"p99={_fmt(lat['p99'])}ms n={lat['count']}")
+    sup = t.get("support")
+    if sup:
+        s = (f"support rows={sup['rows']} active={sup['active']} "
+             f"W={sup['window']}")
+        if sup.get("compressions"):
+            s += (f" m={sup['m']} ratio={_fmt(sup['ratio'])} "
+                  f"drift={_fmt(sup['last_drift'])} "
+                  f"n={sup['compressions']}")
+        parts.append(s)
     cache = t.get("cache")
     if cache:
         parts.append(f"cache hit={cache['hits']} miss={cache['misses']} "

@@ -1,0 +1,61 @@
+"""One-shot generator for ``legacy_snapshot_v1.npz`` — a PINNED
+pre-compressed-format (format 1) estimator snapshot for the version-skew
+test (tests/test_save_load_skew.py).
+
+Format-1 files have no ``format`` / ``compress`` meta keys and no
+``compress`` config field; this script saves a fitted estimator with the
+current code and strips the format-2 additions back out, exactly
+reproducing what a pre-landmark build wrote.  The fixture also embeds a
+query block and its expected labels (``fixture_*`` arrays, ignored by
+``KernelKMeans.load``) so the test pins serving behavior, not just
+loadability.
+
+Run from the repo root (writes next to this file):
+
+    PYTHONPATH=src python tests/fixtures/make_legacy_v1.py
+"""
+import json
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.api import KernelKMeans, SolverConfig
+from repro.data import blobs
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+OUT = os.path.join(HERE, "legacy_snapshot_v1.npz")
+
+
+def main() -> None:
+    cfg = SolverConfig(k=4, batch_size=32, tau=16, max_iters=6,
+                       epsilon=-1.0, early_stop=False, kernel="rbf",
+                       kernel_params={"kappa": 1.0}, cache="none",
+                       distribution="single", jit=True)
+    x, _ = blobs(n=512, d=8, k=4, seed=0)
+    x = np.asarray(x, np.float32)
+    est = KernelKMeans(cfg).fit(x, jax.random.PRNGKey(0))
+
+    with tempfile.TemporaryDirectory() as tmp:
+        p = os.path.join(tmp, "v2.npz")
+        est.save(p)
+        with np.load(p) as data:
+            arrays = {k: np.asarray(data[k]) for k in data.files}
+
+    meta = json.loads(bytes(arrays.pop("meta")).decode())
+    assert meta.pop("format") == 2
+    meta.pop("compress")
+    meta["config"].pop("compress")
+    arrays["meta"] = np.frombuffer(json.dumps(meta).encode(), np.uint8)
+
+    xq = x[:64]
+    arrays["fixture_xq"] = xq
+    arrays["fixture_labels"] = np.asarray(est.predict(xq))
+    with open(OUT, "wb") as f:
+        np.savez(f, **arrays)
+    print(f"wrote {OUT} ({os.path.getsize(OUT)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

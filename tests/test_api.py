@@ -418,7 +418,7 @@ EXPECTED_CONFIG_FIELDS = [
     "restarts", "sampler", "jit", "step", "precision", "prefetch",
     "cache_tile", "cache_capacity", "cache_dtype", "reuse", "refresh",
     "data_axes", "model_axis", "restart_axis", "eval_batch_size",
-    "share_eval_gram",
+    "share_eval_gram", "compress",
 ]
 
 

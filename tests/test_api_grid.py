@@ -413,6 +413,106 @@ def test_step_fused_weighted_bit_identical():
     _assert_state_equal(ec.state_, ef.state_)
 
 
+# ------------------------------------------------------ compress axis grid
+# The compress="off" side of the bar needs no new fits: every grid point
+# above runs the DEFAULT config (compress="off") and is asserted BIT-EXACT
+# against its pre-compression legacy twin, so "off stays pre-PR" is already
+# pinned at every existing point.  These tests add (1) explicit
+# off-vs-default identity (the axis default resolves to the identity
+# convention, mb.compress=None -> same compiled program) and (2) the
+# compress-ON points across the plan families.
+
+_COMPRESS = {"every": 3, "m": 12}
+
+_COMPRESS_POINTS = {
+    "single_host": (dict(cache="none", distribution="single", jit=False),
+                    None),
+    "single_jit": (dict(cache="none", distribution="single", jit=True),
+                   None),
+    "precomputed": (dict(cache="precomputed", distribution="single",
+                         jit=True), None),
+    "single_lru": (dict(cache="lru", distribution="single", jit=False,
+                        cache_tile=32, cache_capacity=8), None),
+    "sharded_jit": (dict(cache="none", distribution="sharded", jit=True),
+                    "mesh"),
+    "sharded_host": (dict(cache="none", distribution="sharded",
+                          jit=False), "mesh"),
+    "sharded_lru": (dict(cache="lru", distribution="sharded", jit=True,
+                         cache_tile=32, cache_capacity=16), "mesh"),
+    "multi_restart": (dict(cache="none", distribution="single",
+                           restarts=2), None),
+    "fused_restart": (dict(cache="none", distribution="sharded", jit=True,
+                           restarts=2), "fused_mesh"),
+}
+
+
+def _mesh_of(kind):
+    if kind == "mesh":
+        return _mesh1()
+    if kind == "fused_mesh":
+        return _fused_mesh1()
+    return None
+
+
+@pytest.mark.parametrize("point", ["single_host", "single_jit",
+                                   "single_lru", "sharded_jit",
+                                   "fused_restart"])
+def test_compress_off_bit_identical_to_default(point):
+    """compress='off' (explicit) vs the default config: same canonical
+    axis value, mb.compress=None, and bit-equal fitted states — the axis
+    is invisible until switched on."""
+    kw, mesh_kind = _COMPRESS_POINTS[point]
+    x = _blobs()
+    ed = KernelKMeans(_cfg(**kw), mesh=_mesh_of(mesh_kind)).fit(x, KEY)
+    eo = KernelKMeans(_cfg(compress="off", **kw),
+                      mesh=_mesh_of(mesh_kind)).fit(x, KEY)
+    assert ed.config.compress == eo.config.compress == "off"
+    assert ed.config.mb_config().compress is None
+    fields = ("pts" if hasattr(ed.state_, "pts") else "idx", "coef",
+              "sqnorm", "counts", "head")
+    for f in fields:
+        np.testing.assert_array_equal(np.asarray(getattr(ed.state_, f)),
+                                      np.asarray(getattr(eo.state_, f)),
+                                      err_msg=f"{point}:{f}")
+
+
+@pytest.mark.parametrize("point", sorted(_COMPRESS_POINTS))
+def test_compress_point_in_loop(point):
+    """compress={'every': 3, 'm': 12} through the plan registry on every
+    family: the in-loop projection leaves only m live slots on cadence
+    (max_iters=6 lands ON cadence), serving works, and the objective
+    stays near the uncompressed run's (the drift bound at these shapes)."""
+    kw, mesh_kind = _COMPRESS_POINTS[point]
+    x = _blobs()
+    off = KernelKMeans(_cfg(**kw), mesh=_mesh_of(mesh_kind)).fit(x, KEY)
+    on = KernelKMeans(_cfg(compress=_COMPRESS, **kw),
+                      mesh=_mesh_of(mesh_kind)).fit(x, KEY)
+    assert on.plan_.name == off.plan_.name
+    m = _COMPRESS["m"]
+    coef = np.asarray(on.state_.coef)
+    assert np.all(coef[..., m:] == 0), f"{point}: live slots past m"
+    assert np.count_nonzero(coef) > 0
+    lab = np.asarray(on.predict(x[:64]))
+    assert lab.shape == (64,) and lab.max() < 4
+    assert abs(on.score(x[:64]) - off.score(x[:64])) < 0.2
+    if on.result_ is not None:
+        assert np.isfinite(np.asarray(on.result_.objectives)).all()
+
+
+def test_compress_jit_matches_host():
+    """The in-loop hook keeps the host-loop and while_loop executors on
+    the SAME trajectory: per-center selection is keyed by (step, center),
+    not by executor."""
+    x = _blobs()
+    eh = KernelKMeans(_cfg(cache="none", distribution="single", jit=False,
+                           compress=_COMPRESS)).fit(x, KEY)
+    ej = KernelKMeans(_cfg(cache="none", distribution="single", jit=True,
+                           compress=_COMPRESS)).fit(x, KEY)
+    _assert_state_equal(eh.state_, ej.state_)
+    np.testing.assert_array_equal(np.asarray(eh.state_.idx),
+                                  np.asarray(ej.state_.idx))
+
+
 # -------------------------------------------------- pad-and-mask (1 device)
 def test_n_valid_none_matches_legacy_bound_single_shard():
     """n_valid == full rows on a 1-shard mesh: the masked sampler bound is

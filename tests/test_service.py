@@ -296,8 +296,15 @@ def test_telemetry_poll_shape(tmp_path):
     assert t["queue"]["capacity"] == actor._queue.maxsize
     assert t["latency_ms"]["count"] == 0 and t["latency_ms"]["p99"] is None
     assert t["cache"] is None
+    # the serving-cost gauge is reported even with compress="off"
+    sup = t["support"]
+    assert sup is not None
+    assert sup["rows"] == sup["k"] * sup["window"]
+    assert 0 < sup["active"] <= sup["rows"]
+    assert sup["compressions"] == 0
     line = telemetry.format_line(t)
     assert line.startswith("svc | ") and "builds fit=" in line
+    assert "support rows=" in line
 
 
 def test_telemetry_without_actor_sections_none():
@@ -305,6 +312,51 @@ def test_telemetry_without_actor_sections_none():
     assert t["queue"] is None and t["snapshot"] is None
     assert t["programs"]["serve_compiles"] is None
     assert isinstance(t["programs"]["fit_builds"], int)
+
+
+# ----------------------------------------------- compressed serving path
+def test_compressed_snapshots_swap_without_recompiles(tmp_path):
+    """With the compress axis on, every published snapshot serves at the
+    same (k*m) shape, so snapshot swaps after the first warmup trace
+    nothing new — the landmark extension of the zero-recompile gate."""
+    M = 8
+    learner, actor, store, buf, _ = _svc(tmp_path, compress={"m": M},
+                                         publish_every=1)
+    learner.run(4)
+    sup = learner.est.support_stats()
+    assert sup["rows"] == K * M and sup["compressions"] == 4
+    assert sup["window"] == M           # the serving window is now m
+    assert sup["ratio"] == pytest.approx(M / (B + TAU))
+    assert actor.try_swap(force=True)
+    assert actor.support_stats()["rows"] == K * M
+    warm = actor.serve_compiles
+    assert warm > 0
+    v0 = actor.version
+    # further compressed snapshots: swaps re-warm at the SAME (k*m)
+    # serving shapes, so the compile counter must not move
+    for j in range(2):
+        store.publish(learner.est, v0 + j + 1)
+        assert actor.try_swap()
+    assert actor.version == v0 + 2
+    assert actor.serve_compiles == warm
+    # the actor's padded predict serves from the compressed model
+    actor.start()
+    try:
+        labels = actor.predict(buf.snapshot()[:40])
+        assert np.asarray(labels).shape == (40,)
+    finally:
+        actor.stop()
+    assert actor.serve_compiles == warm
+
+
+def test_uncompressed_service_unchanged_by_compress_axis(tmp_path):
+    """compress='off' (the default) publishes the full-window serving
+    tuple exactly as before the axis existed."""
+    learner, actor, store, buf, _ = _svc(tmp_path)
+    learner.run(1)
+    sup = learner.est.support_stats()
+    assert sup["compressions"] == 0 and sup["m"] is None
+    assert sup["rows"] == K * sup["window"]
 
 
 # -------------------------------------------- serve.py snapshot round-trip
@@ -378,3 +430,50 @@ def test_learner_recovery_bit_identical_8dev():
     + restored learner's FitCarry is bit-identical to an uninterrupted
     run's."""
     _run(RESILIENT_8DEV, "SERVICE-RESILIENT-OK")
+
+
+RESILIENT_COMPRESSED_8DEV = """
+    import tempfile
+    import jax, numpy as np
+    from repro.service.demo import build_service
+
+    assert len(jax.devices()) == 8, jax.devices()
+
+    def run(crash_at):
+        with tempfile.TemporaryDirectory() as d:
+            learner, _, store, _, _ = build_service(
+                d, k=4, d=8, capacity=128, batch_size=32, tau=16,
+                iters_per_round=2, publish_every=2, arrivals_per_step=64,
+                compress={"m": 8})
+            if crash_at is not None:
+                armed = [True]
+                def boom(rnd):
+                    if rnd == crash_at and armed[0]:
+                        armed[0] = False
+                        raise RuntimeError("injected crash")
+                learner.on_round = boom
+            carry = learner.run(8)
+            _, sup, coef, sq = learner.est._serving
+            return (carry, learner.restores,
+                    tuple(np.asarray(a) for a in (sup, coef, sq)))
+
+    a, r_a, s_a = run(None)
+    b, r_b, s_b = run(5)
+    assert r_a == 0 and r_b == 1, (r_a, r_b)
+    for xa, xb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+    # the published COMPRESSED serving model is bit-identical too: the
+    # landmark selection is keyed by the carried step counter
+    assert s_a[1].shape == (4, 8), s_a[1].shape
+    for xa, xb in zip(s_a, s_b):
+        np.testing.assert_array_equal(xa, xb)
+    print("SERVICE-COMPRESSED-RESILIENT-OK")
+"""
+
+
+@pytest.mark.slow
+def test_compressed_learner_recovery_bit_identical_8dev():
+    """Crash recovery through run_resilient restores a COMPRESSED learner
+    bit-identically: same carry AND same published landmark serving
+    model (selection is keyed by the carried step counter)."""
+    _run(RESILIENT_COMPRESSED_8DEV, "SERVICE-COMPRESSED-RESILIENT-OK")
