@@ -688,16 +688,20 @@ def bench_api_overhead(fast: bool):
     t_direct = (time.perf_counter() - t0) / reps
 
     # estimator: same plan point, compiled program cached on the executor
+    from repro.api.executors import program_builds
+
     est = KernelKMeans(SolverConfig(
         k=k, batch_size=b, tau=tau, max_iters=iters, epsilon=-1.0,
         kernel=GAUSS, cache="none", distribution="single", jit=True))
     est.fit(x, key, init_idx=init_idx)                        # compile
     jax.block_until_ready(est.state_.sqnorm)
+    builds_before = program_builds()
     t0 = time.perf_counter()
     for _ in range(reps):
         est.fit(x, key, init_idx=init_idx)
         jax.block_until_ready(est.state_.sqnorm)
     t_est = (time.perf_counter() - t0) / reps
+    rebuilds = program_builds() - builds_before
 
     # legacy fit_jit: pays a re-trace on every call (the cost the
     # estimator's cached executor removes)
@@ -715,11 +719,16 @@ def bench_api_overhead(fast: bool):
     print(f"api_overhead_direct,{t_direct * 1e6:.0f},compiled_loop")
     print(f"api_overhead_estimator,{t_est * 1e6:.0f},"
           f"{ratio:.2f}x_vs_direct")
+    print(f"api_overhead_repeat_builds,{rebuilds},programs_rebuilt")
     print(f"api_overhead_legacy_fit_jit,{t_legacy * 1e6:.0f},"
           f"{t_legacy / t_direct:.2f}x_vs_direct (per-call retrace)")
     assert ratio < 1.5, (
         f"estimator dispatch overhead {ratio:.2f}x vs direct compiled "
         "call — plan dispatch must resolve at trace time")
+    assert rebuilds == 0, (
+        f"{rebuilds} compiled programs rebuilt across {reps} repeat fits "
+        "— the loop-core program cache must hold them flat (the PR-5 "
+        "contract, re-pinned after the PR-9 loop-core refactor)")
 
 
 # ----------------------------------------------------------------- service

@@ -200,6 +200,69 @@ class KernelKMeans:
     def fit_predict(self, X, key: Any = 0, **kw):
         return self.fit(X, key, **kw).predict(X)
 
+    # ----------------------------------------------------------- explain
+    def explain(self, n: Optional[int] = None, *, d: int = 16,
+                deep: bool = False) -> dict:
+        """The resolved execution plan WITHOUT fitting anything: the
+        registered solver it lowers to, the resolved config axes, the
+        plan's :class:`repro.core.loop.LoopSpec` (sampler / step body /
+        placement / donation / active hooks) and the canonical fit-loop
+        stage sequence.  ``serve --dry-run`` prints exactly this.
+
+        ``n``: dataset rows to resolve the plan for (the ``auto`` axes are
+        size-dependent); defaults to the fitted dataset's size, else 4096.
+        ``deep=True`` additionally ``.lower().compile()``'s the plain
+        single-device step on ``(n, d)`` ShapeDtypeStructs and attaches
+        its HLO memory/cost/collective analysis
+        (:func:`repro.launch.analysis.analyze_compiled`)."""
+        from repro.core import loop as loop_lib
+
+        if n is None:
+            n = self._x.shape[0] if self._x is not None else 4096
+        plan = self.plan_for(n)
+        resolved = self.config.resolve(n=n, mesh=self.mesh)
+        spec = plan.executor.loop_spec()
+        out = {
+            "plan": plan.name,
+            "n": int(n),
+            "config": {f: getattr(resolved, f) for f in
+                       ("cache", "distribution", "restarts", "sampler",
+                        "jit", "step", "precision", "prefetch",
+                        "compute_dtype")},
+            "lowering": dict(spec._asdict()),
+            "stages": loop_lib.stages(spec),
+        }
+        if deep:
+            out["compiled_step"] = self._explain_deep(plan, n, d)
+        return out
+
+    def _explain_deep(self, plan, n: int, d: int) -> dict:
+        """HLO analysis of the representative step program.  Only the
+        plain coordinate-kernel step is analyzable without a dataset in
+        the closure (precomputed/cached/sharded programs are built inside
+        ``fit`` around the actual Gram / tile caches / mesh placement)."""
+        if plan.name != "single":
+            return {"note": f"plan {plan.name!r} builds its step program "
+                            "inside fit (dataset / tile-cache / mesh "
+                            "closure); fit once and inspect "
+                            "program_builds() or benchmarks/run.py "
+                            "instead"}
+        from repro.core.minibatch import make_step
+        from repro.core.state import init_state, window_size
+        from repro.launch.analysis import analyze_compiled
+
+        ex = plan.executor
+        mb = ex.mb
+        w = window_size(mb.batch_size, mb.tau)
+        x_s = jax.ShapeDtypeStruct((n, d), jnp.float32)
+        idx_s = jax.ShapeDtypeStruct((mb.k,), jnp.int32)
+        state_s = jax.eval_shape(
+            lambda x, i: init_state(x, i, ex.kernel, w), x_s, idx_s)
+        b_s = jax.ShapeDtypeStruct((mb.batch_size,), jnp.int32)
+        compiled = jax.jit(make_step(ex.kernel, mb)).lower(
+            state_s, x_s, b_s).compile()
+        return analyze_compiled(compiled)
+
     # ----------------------------------------------- landmark compression
     def compress(self, m: Optional[int] = None,
                  selector: Optional[str] = None,

@@ -1,31 +1,51 @@
-"""Solver executors — the composed fit/predict drivers behind every plan.
+"""Solver executors — declarative plan LOWERINGS onto the fit-loop core.
 
-Each executor owns exactly the orchestration that used to be copy-pasted
-across the ``fit_*`` family: PRNG key-splitting (:mod:`repro.api.keys`),
+The loop skeleton itself — stage sequence, early stop, prefetch, the
+precision/compress hooks, compiled-program caching, the resumable carry —
+lives ONCE in :mod:`repro.core.loop`.  Each executor here supplies only
+what genuinely differs between plan families, its :class:`LoopSpec`:
+
+* the **sampler** (iid / weighted / nested / shard-local on-device),
+* the **step body** (composed/fused ``make_step``, the cached warm+step
+  pair, the shard_map ``_make_sampling_body``),
+* the **mesh placement** (single device, data x model, restart x data x
+  model) and
+* the **donation signature** of its main fit program.
+
+plus the orchestration that used to be copy-pasted across the ``fit_*``
+family: PRNG key derivation (:func:`repro.api.keys.derive_fit_keys`),
 init drawing (:func:`repro.core.init.draw_init`), divisibility
 pad-and-mask (:func:`repro.core.distributed.pad_for_mesh`), and cache
-lifecycle (build/warm/thread of the Gram tile cache).  The numerical inner
-loops stay in :mod:`repro.core` (``make_step``, ``run_early_stopped*``,
-``host_fit_loop``, the shard_map step builders) — executors only compose
-them, so a plan-vs-legacy trajectory is the *same* compiled computation.
+lifecycle (build/warm/thread of the Gram tile cache).  A plan-vs-legacy
+trajectory is therefore the *same* compiled computation, and new
+cross-cutting axes register against the loop core once instead of once
+per family (the PR-5/PR-7 lesson).
 
 Executors are stateful on purpose: they cache the compiled programs
-(jitted step / while_loop run) across ``fit`` calls, which is what makes
-``KernelKMeans`` dispatch resolve at trace time with zero per-step Python
-overhead (see ``benchmarks/run.py api_overhead``).
+(jitted step / while_loop run) across ``fit`` calls — instance-local plus
+the cross-executor registry in the loop core (``lookup_program``), which
+is what makes ``KernelKMeans`` dispatch resolve at trace time with zero
+per-step Python overhead (see ``benchmarks/run.py api_overhead``).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, List, NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.api import keys as api_keys
 from repro.api.config import SolverConfig
 from repro.core import init as init_lib
+from repro.core.loop import (  # noqa: F401  (canonical home: the loop core;
+    # re-exported here for the historical import surface — estimator,
+    # service snapshot/telemetry, benchmarks and tests all import these
+    # names from repro.api.executors)
+    FitCarry, FitOutcome, LoopSpec, _kernel_sig, _x_keyed_run, carry_of,
+    clear_program_cache, lookup_program, outcome_from_carry, program_builds,
+)
+from repro.core.loop import loop_config as _loop_mb
+from repro.core.loop import precision_plan
 from repro.core.minibatch import (
     assign_chunked, center_distances_chunked, host_fit_loop, make_step,
     run_early_stopped, run_early_stopped_keyed, sampled_step_with_key,
@@ -35,140 +55,9 @@ from repro.core.state import init_state, window_size
 _assign = jax.jit(assign_chunked, static_argnames=("chunk",))
 _distances = jax.jit(center_distances_chunked, static_argnames=("chunk",))
 
-
-# ---------------------------------------------------------------------------
-# Cross-executor compiled-program cache.
-#
-# Executors already cache their compiled programs on the instance, but the
-# instance is rebuilt whenever a plan is re-resolved (a fresh KernelKMeans
-# per fit, the legacy shims, plan signature changes) — and every rebuild
-# used to re-bind (re-trace, re-compile) programs whose closure is
-# IDENTICAL: same Algorithm-2 statics, same kernel values, same mesh, same
-# donated-argnum signature.  This registry keys compiled programs on
-# exactly that closure signature, so repeated ``fit`` / ``partial_fit`` on
-# same-shape data reuses ONE executable across executor instances.
-# Kernels with large array leaves (Precomputed grams, cached kernels) are
-# not value-keyed — id() reuse after GC could alias two different datasets
-# — so those programs stay instance-local, the historical behaviour.
-#
-# ``program_builds()`` counts actual program constructions (the
-# compile-counter hook tests/test_fused_step.py regresses against).
-
-_PROGRAM_CACHE: dict = {}        # insertion-ordered (LRU via re-insert)
-_PROGRAM_CACHE_MAX = 128         # distinct (config, kernel, mesh) closures
-_PROGRAM_BUILDS = [0]
-
-
-def program_builds() -> int:
-    """How many compiled fit programs have been BUILT (not reused) since
-    import — a monotone counter; snapshot it around a fit to assert the
-    fit re-bound nothing."""
-    return _PROGRAM_BUILDS[0]
-
-
-def clear_program_cache() -> None:
-    _PROGRAM_CACHE.clear()
-
-
-def _cache_put(key, prog) -> None:
-    """Insert with LRU eviction: the registry is process-lifetime, and
-    keys carry dataset-dependent parts (padded sizes, max_iters), so a
-    long-running service fitting many shapes must not pin every
-    executable it ever compiled.  Evicted programs stay alive as long as
-    some executor instance still holds them (``self._programs``)."""
-    _PROGRAM_CACHE[key] = prog
-    while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_MAX:
-        _PROGRAM_CACHE.pop(next(iter(_PROGRAM_CACHE)))
-
-
-def _cache_get(key):
-    prog = _PROGRAM_CACHE.pop(key, None)
-    if prog is not None:
-        _PROGRAM_CACHE[key] = prog        # refresh recency
-    return prog
-
-
-def _kernel_sig(kernel):
-    """Value signature of a kernel pytree, or None when any leaf is too
-    large to key by value (then programs must stay instance-local)."""
-    leaves, treedef = jax.tree_util.tree_flatten(kernel)
-    sig = []
-    for leaf in leaves:
-        a = np.asarray(leaf)
-        if a.size > 64:
-            return None
-        sig.append((a.dtype.str, a.shape, a.tobytes()))
-    return (treedef, tuple(sig))
-
-
-@dataclasses.dataclass
-class FitOutcome:
-    """What a plan's ``fit`` produced.  ``state`` is a ``CenterState``
-    (single-device plans) or ``DistState`` (sharded plans); the optional
-    fields carry plan-specific artifacts (tile cache, engine diagnostics,
-    the carried PRNG key for ``partial_fit`` resumption)."""
-
-    state: Any
-    iters: Any                              # python int or on-device scalar
-    history: Optional[List[dict]] = None    # host-driven plans only
-    key: Optional[jax.Array] = None         # carried fit-stream key
-    steps: int = 0                          # completed host-loop steps
-    cache: Any = None                       # CachedKernel (single lru plan)
-    caches: Any = None                      # stacked per-shard tile caches
-    engine: Any = None                      # EngineResult (multi-restart)
-    x_view: Any = None                      # index-data view (lru/precomp)
-
-
-class FitCarry(NamedTuple):
-    """The resumable part of a fit — everything ``partial_fit`` needs to
-    continue the batch stream bit-exactly, and therefore everything
-    ``KernelKMeans.save`` must round-trip: the full center state, the
-    carried PRNG fit key, the completed-step cursor (the nested sampler's
-    schedule position), and the iteration count."""
-
-    state: Any                    # CenterState (single-device plans)
-    key: jax.Array                # carried fit-stream key
-    steps: Optional[int]          # host-loop cursor; None on jit-only fits
-    iters: int
-
-
-def carry_of(outcome: FitOutcome) -> Optional[FitCarry]:
-    """The serializable resume carry of an outcome, or None when the plan
-    that produced it cannot resume (no carried key)."""
-    if outcome is None or outcome.key is None:
-        return None
-    return FitCarry(state=outcome.state, key=outcome.key,
-                    steps=outcome.steps, iters=int(outcome.iters))
-
-
-def outcome_from_carry(carry: FitCarry) -> FitOutcome:
-    """Rehydrate a deserialized carry into a resumable outcome."""
-    return FitOutcome(state=carry.state, iters=carry.iters, key=carry.key,
-                      steps=carry.steps)
-
-
-def _loop_mb(mb, early_stop: bool, max_iters=None):
-    """The MBConfig a jitted early-stopped loop should run with:
-    ``early_stop=False`` lowers to an epsilon no improvement can undercut
-    (the ``run_early_stopped`` condition is baked into the compiled loop,
-    unlike the host loop's python check)."""
-    if max_iters is not None:
-        mb = mb._replace(max_iters=max_iters)
-    if not early_stop:
-        mb = mb._replace(epsilon=float("-inf"))
-    return mb
-
-
-def _derive_keys(key, init_given: bool, always_split: bool):
-    """``(init_key, fit_key)`` under the unified derivation.  The estimator
-    always splits (``always_split=True``) so its batch stream never depends
-    on who drew the init; the legacy shims only split when they draw the
-    init themselves (historical behaviour, bit-exactness of old tests)."""
-    if not init_given:
-        return api_keys.split_init(key)
-    if always_split:
-        return None, api_keys.split_init(key)[1]
-    return None, key
+# the unified root derivation (see repro.api.keys docstring); kept under
+# the historical private name for in-repo callers
+_derive_keys = api_keys.derive_fit_keys
 
 
 class Executor:
@@ -187,28 +76,36 @@ class Executor:
         self._programs = {}      # instance-local compiled-program cache
 
     def _program(self, key, build, kernel_free: bool = False):
-        """Compiled-program lookup: instance cache first, then the
-        cross-executor registry (see module docs above).  ``key`` must
-        capture the FULL closure signature minus the kernel — loop
-        statics, mesh/axes, and the donated-argnum signature.  The kernel
-        is value-keyed when its leaves are small; ``kernel_free`` marks
-        programs that take the kernel as a traced ARGUMENT (nothing
-        kernel-shaped in the closure), which share unconditionally."""
-        prog = self._programs.get(key)
-        if prog is None:
-            ksig = True if kernel_free else _kernel_sig(self.kernel)
-            if ksig is None:
-                _PROGRAM_BUILDS[0] += 1
-                prog = build()
-            else:
-                gkey = (type(self).__name__, key, ksig)
-                prog = _cache_get(gkey)
-                if prog is None:
-                    _PROGRAM_BUILDS[0] += 1
-                    prog = build()
-                    _cache_put(gkey, prog)
-            self._programs[key] = prog
-        return prog
+        """Compiled-program lookup through the loop core's cross-executor
+        registry (:func:`repro.core.loop.lookup_program`): instance cache
+        first, then the global registry keyed on the executor family +
+        ``key`` + the kernel value signature.  ``key`` must capture the
+        FULL closure signature minus the kernel — loop statics, mesh/axes,
+        and the donated-argnum signature; ``kernel_free`` marks programs
+        that take the kernel as a traced ARGUMENT (nothing kernel-shaped
+        in the closure), which share unconditionally."""
+        return lookup_program(self._programs, type(self).__name__, key,
+                              build, kernel=self.kernel,
+                              kernel_free=kernel_free)
+
+    def _hooks(self, prefetch_ok: bool = True) -> tuple:
+        """Which cross-cutting loop-core axes are ACTIVE under this plan —
+        each axis has exactly one registration site in the loop core
+        (prefetch: ``drive_fit_loop``; precision: ``precision_plan``;
+        compress: ``compress_hook``)."""
+        hooks = []
+        if prefetch_ok and self.config.prefetch:
+            hooks.append("prefetch")
+        if precision_plan(self.kernel, self.mb).cdt is not None:
+            hooks.append("precision:bf16")
+        if self.mb.compress is not None and self.mb.compress.every > 0:
+            hooks.append("compress")
+        return tuple(hooks)
+
+    def loop_spec(self) -> LoopSpec:
+        """How this plan lowers onto the fit-loop core (the explain()
+        surface).  Families override to describe their genuine deltas."""
+        raise NotImplementedError
 
     # -- fitting ----------------------------------------------------------
     def fit(self, x, key, init_idx=None, center_pts=None,
@@ -253,19 +150,6 @@ def _sharded_batch_setup(executor: "Executor"):
         executor._shards
     executor._mb_eff = executor.mb._replace(
         batch_size=executor.effective_batch_size)
-
-
-def _x_keyed_run(runs: dict, key, x_real, build):
-    """Compile-cache lookup for programs that CLOSE OVER a dataset
-    (``x_real``): the entry is valid only for that exact array object,
-    never merely for its shape — refitting on new same-shaped data must
-    rebuild (regression: stale coordinates baked in as jit constants)."""
-    entry = runs.get(key)
-    if entry is not None and entry[0] is x_real:
-        return entry[1]
-    run = build()
-    runs[key] = (x_real, run)
-    return run
 
 
 # ---------------------------------------------------------------- single
@@ -318,6 +202,17 @@ class SingleExecutor(Executor):
     def _use_jit(self, sample_weight):
         return (self.config.jit and sample_weight is None
                 and self.config.sampler == "iid")
+
+    def loop_spec(self) -> LoopSpec:
+        jit = self._use_jit(None)
+        return LoopSpec(
+            lowering=self.name,
+            driver="device" if jit else "host",
+            sampler=self.config.sampler,
+            step=f"make_step[{self.mb.step}]",
+            placement="single device",
+            donation=("state", "key") if jit else ("state",),
+            hooks=self._hooks(prefetch_ok=not jit))
 
     def fit(self, x, key, init_idx=None, center_pts=None,
             sample_weight=None, always_split: bool = True,
@@ -388,6 +283,18 @@ class PrecomputedExecutor(Executor):
     values in as constants."""
 
     name = "single_precomputed"
+
+    def loop_spec(self) -> LoopSpec:
+        jit = self.config.jit and self.config.sampler == "iid"
+        return LoopSpec(
+            lowering=self.name,
+            driver="device" if jit else "host",
+            sampler=self.config.sampler,
+            step=f"make_step[{self.mb.step}] over a precomputed Gram "
+                 "(traced argument; iterations are pure gathers)",
+            placement="single device",
+            donation=() if jit else ("state",),
+            hooks=self._hooks(prefetch_ok=not jit))
 
     def _jit_run(self):
         mb = _loop_mb(self.mb, self.config.early_stop)
@@ -472,6 +379,16 @@ class CachedExecutor(Executor):
                              "sqnorm_mode='recompute' / eval_mode='direct' "
                              "(per-center vmapped kernel evals defeat the "
                              "cache's cond-skip)")
+
+    def loop_spec(self) -> LoopSpec:
+        return LoopSpec(
+            lowering=self.name,
+            driver="host",
+            sampler=self.config.sampler,
+            step="warm Gram tile cache + make_step (one jitted program)",
+            placement="single device",
+            donation=("state", "tile cache"),
+            hooks=self._hooks())
 
     def _ensure_step(self):
         from repro import cache as cache_lib
@@ -572,6 +489,27 @@ class ShardedExecutor(Executor):
 
     def _mb_for(self, strict: bool):
         return self.mb if strict else self._mb_eff
+
+    def _placement(self) -> str:
+        cfg = self.config
+        return (f"mesh {dict(self.mesh.shape)}: centers over "
+                f"{cfg.model_axis!r}, batch over {tuple(cfg.data_axes)!r}")
+
+    def loop_spec(self) -> LoopSpec:
+        if self.config.jit:
+            return LoopSpec(
+                lowering=self.name, driver="device",
+                sampler="shard-local on-device (stratified-uniform over "
+                        "the data shards)",
+                step="_make_sampling_body (shard_map)",
+                placement=self._placement(), donation=("DistState",),
+                hooks=self._hooks(prefetch_ok=False))
+        return LoopSpec(
+            lowering=self.name, driver="stream",
+            sampler="host batch stream (keyed ClusterBatchPipeline)",
+            step="make_dist_step (shard_map)",
+            placement=self._placement(), donation=("DistState",),
+            hooks=self._hooks())
 
     def _get_run(self, n_valid, strict: bool):
         mb = self._mb_for(strict)
@@ -691,6 +629,12 @@ class ShardedCachedExecutor(ShardedExecutor):
 
     name = "sharded_lru"
 
+    def loop_spec(self) -> LoopSpec:
+        return super().loop_spec()._replace(
+            step="cached _make_sampling_body (per-shard Gram tile caches "
+                 "ride the while_loop carry)",
+            donation=("DistState", "shard caches"))
+
     def _get_cached_run(self, x_real, n_valid, strict: bool):
         def build():
             from repro.core.distributed import (
@@ -798,6 +742,20 @@ class RestartExecutor(Executor):
         self._run = None
         self._init_run = None
 
+    def loop_spec(self) -> LoopSpec:
+        cfg = self.config
+        placement = ("single device (vmapped restart axis)"
+                     if self.mesh is None else
+                     f"restart axis sharded over mesh {dict(self.mesh.shape)}")
+        return LoopSpec(
+            lowering=self.name, driver="device",
+            sampler=f"iid, R={cfg.restarts} independent per-restart key "
+                    "streams",
+            step=f"vmap(make_step[{self.mb.step}]) + shared-eval-batch "
+                 "winner selection",
+            placement=placement, donation=(),
+            hooks=self._hooks(prefetch_ok=False))
+
     def fit(self, x, key, init_idx=None, center_pts=None,
             sample_weight=None, always_split: bool = True,
             _run=None, _init_run=None, **kw) -> FitOutcome:
@@ -860,6 +818,22 @@ class FusedRestartExecutor(Executor):
         _sharded_batch_setup(self)
         self._runs = {}
         self._init_run = None
+
+    def loop_spec(self) -> LoopSpec:
+        cfg = self.config
+        cached = cfg.cache == "lru"
+        return LoopSpec(
+            lowering=self.name, driver="device",
+            sampler="shard-local on-device, per-restart key streams",
+            step=("cached _make_sampling_body x restarts (per-(restart, "
+                  "shard) tile caches ride the carry)" if cached else
+                  "_make_sampling_body x restarts (one shard_map program)"),
+            placement=(f"mesh {dict(self.mesh.shape)}: restarts over "
+                       f"{self.restart_axis!r}, centers over "
+                       f"{cfg.model_axis!r}, batch over "
+                       f"{tuple(cfg.data_axes)!r}"),
+            donation=("shard caches",) if cached else (),
+            hooks=self._hooks(prefetch_ok=False))
 
     def _eval_size(self, n: int) -> int:
         eb = self.config.eval_batch_size \

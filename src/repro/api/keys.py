@@ -96,7 +96,27 @@ def batch_key_at(key: jax.Array, step: int) -> jax.Array:
     return kb
 
 
+def derive_fit_keys(key: jax.Array, init_given: bool,
+                    always_split: bool = True):
+    """``(init_key, fit_key)`` at fit entry — THE audited root derivation
+    every executor family performs (formerly ``executors._derive_keys``,
+    duplicated per entry point before PR 3).
+
+    * no explicit init:       ``split_init`` — init draw consumes the first
+      split, the fit stream starts from the second.
+    * init given, estimator:  ``always_split=True`` still burns the init
+      split so the batch stream does not depend on who drew the init.
+    * init given, legacy:     ``always_split=False`` reproduces the
+      historical shims bit-exactly — the root key IS the fit key.
+    """
+    if not init_given:
+        return split_init(key)
+    if always_split:
+        return None, split_init(key)[1]
+    return None, key
+
+
 __all__ = [
     "as_key", "split_init", "next_batch_key", "shard_key", "restart_keys",
-    "per_restart", "batch_key_at",
+    "per_restart", "batch_key_at", "derive_fit_keys",
 ]

@@ -39,6 +39,7 @@ from repro.core.compat import shard_map
 from repro.core.kernel_fns import (
     KernelFn, gram_rows_fn, kernel_cross, kernel_diag,
 )
+from repro.core.loop import compress_hook, drive_fit_loop, precision_plan
 from repro.core.minibatch import MBConfig
 from repro.core.rates import get_rate
 from repro.core.state import CenterState
@@ -165,16 +166,12 @@ def _make_local_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
     # corrupt the gather keys, and the streaming slab loop would multiply
     # cache lookups for values that are gathers; they keep the composed
     # passes (and full precision) regardless of cfg.step / compute_dtype.
-    from repro.core.kernel_fns import is_index_data
-    index_data = is_index_data(kernel)
+    # The resolution lives ONCE in the loop core (precision_plan).
+    prec = precision_plan(kernel, cfg)
+    index_data = prec.index_data
     stream = cfg.step == "fused" and not index_data
-    cdt = jnp.bfloat16 if (cfg.compute_dtype == "bfloat16"
-                           and not index_data) else None
-
-    def _c(x):
-        """kernel-eval compute dtype cast (bf16 = MXU native; coefficients
-        and accumulations stay f32)."""
-        return x.astype(cdt) if cdt is not None else x
+    cdt = prec.cdt
+    _c = prec.cast  # bf16 = MXU native; coefficients/accumulations stay f32
 
     def p_of(pts, coef, xb_loc):
         """P[i,j] = <phi(xb_loc[i]), C_j> over this shard's centers.
@@ -339,13 +336,11 @@ def _make_local_step(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
                               step=state.step + 1)
         return new_state, DistInfo(f_before, f_after, f_before - f_after, bj)
 
-    if cfg.compress is not None and cfg.compress.every > 0:
-        # in-loop landmark projection of the shard-local center windows
-        # (fully center-local — zero collectives); compress=None emits the
-        # historical program unchanged
-        from repro.landmark.compress import wrap_local_step
-        return wrap_local_step(local_step, kernel, cfg.compress, model_axis)
-    return local_step
+    # in-loop landmark projection of the shard-local center windows
+    # (fully center-local — zero collectives); compress=None emits the
+    # historical program unchanged.  Single registration site: loop core.
+    return compress_hook(local_step, kernel, cfg, local=True,
+                         model_axis=model_axis)
 
 
 def _state_specs(model_axis: str):
@@ -480,7 +475,12 @@ def _fit_distributed_impl(xb_stream, center_pts: jax.Array,
     (the ROADMAP async-prefetch item).  The step consumes the same batch
     values in the same order, so results are bit-identical to the
     blocking path (tested); the only observable difference is that an
-    early stop may have consumed one extra item from the iterator."""
+    early stop may have consumed one extra item from the iterator.
+
+    Lowered onto the shared host driver
+    (:func:`repro.core.loop.drive_fit_loop`): this function supplies only
+    the iterator-backed batch producer, the mesh staging (``device_put``
+    to the data-axes sharding) and the sharded step dispatch."""
     from repro.core.state import window_size
 
     w = window_size(cfg.batch_size, cfg.tau)
@@ -491,37 +491,21 @@ def _fit_distributed_impl(xb_stream, center_pts: jax.Array,
                    donate_argnums=(0,))
     xspec = NamedSharding(mesh, P(tuple(data_axes), None))
 
-    history = []
-    if not prefetch:
-        for i, xb in enumerate(xb_stream):
-            if i >= cfg.max_iters:
-                break
-            state, info = step(state, jax.device_put(xb, xspec))
-            imp = float(info.improvement)
-            history.append(dict(step=i, f_before=float(info.f_before),
-                                f_after=float(info.f_after),
-                                improvement=imp))
-            if early_stop and imp < cfg.epsilon:
-                break
-        return state, history
-
     it = iter(xb_stream)
-    nxt = next(it, None)
-    cur = jax.device_put(nxt, xspec) if nxt is not None else None
-    for i in range(cfg.max_iters):
-        if cur is None:
-            break
-        state, info = step(state, cur)        # async dispatch
-        cur = None
-        if i + 1 < cfg.max_iters:
-            nxt = next(it, None)              # overlaps the device step
-            if nxt is not None:
-                cur = jax.device_put(nxt, xspec)
-        imp = float(info.improvement)         # host sync point
-        history.append(dict(step=i, f_before=float(info.f_before),
-                            f_after=float(info.f_after), improvement=imp))
-        if early_stop and imp < cfg.epsilon:
-            break
+
+    def draw(cursor, i):
+        # stream-driven: the cursor is unused, the iterator is the state
+        return cursor, next(it, None)
+
+    def dispatch(xb):
+        nonlocal state
+        state, info = step(state, jax.device_put(xb, xspec))
+        return info
+
+    history, _ = drive_fit_loop(
+        dispatch, draw, None, max_iters=cfg.max_iters, epsilon=cfg.epsilon,
+        early_stop=early_stop, prefetch=prefetch,
+        stage=lambda xb: jax.device_put(xb, xspec))
     return state, history
 
 

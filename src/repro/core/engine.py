@@ -34,9 +34,10 @@ from jax.sharding import Mesh
 from repro.api import keys as api_keys
 from repro.core import init as init_lib
 from repro.core.kernel_fns import KernelFn, diag_of
+from repro.core.loop import run_early_stopped, run_early_stopped_keyed
 from repro.core.minibatch import (
     MBConfig, batch_objective, batch_objective_from_rows,
-    make_step, run_early_stopped, sample_batch, sampled_step_with_key,
+    make_step, sample_batch, sampled_step_with_key,
 )
 from repro.core.state import CenterState, init_state, window_size
 
@@ -225,7 +226,7 @@ def make_fused_restart_run(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
     psum — the host only ever sees the winner.
 
     ``cfg`` must already be the LOOP config (epsilon lowered for
-    ``early_stop=False`` — see ``executors._loop_mb``).  ``eval_size`` is
+    ``early_stop=False`` — see ``repro.core.loop.loop_config``).  ``eval_size`` is
     the global eval-batch row count (must divide the data shards).
 
     Uncached (``x_real=None``): returns
@@ -245,8 +246,6 @@ def make_fused_restart_run(kernel: KernelFn, cfg: MBConfig, mesh: Mesh,
     from repro.core.compat import shard_map
     from repro.core.distributed import DistState
     from repro.core.kernel_fns import kernel_cross, kernel_diag
-    from repro.core.minibatch import run_early_stopped_keyed
-
     data_axes = tuple(data_axes)
     r_size = mesh.shape[restart_axis]
     if restarts % r_size:

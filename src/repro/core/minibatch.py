@@ -28,6 +28,10 @@ from repro.api import keys as api_keys
 from repro.core.kernel_fns import (
     KernelFn, diag_of, gram_rows_fn, kernel_cross,
 )
+from repro.core.loop import (  # noqa: F401  (re-exported loop-core names)
+    compress_hook, drive_fit_loop, precision_plan, run_early_stopped,
+    run_early_stopped_keyed,
+)
 from repro.core.rates import get_rate
 from repro.core.state import CenterState, init_state, window_size
 
@@ -185,10 +189,8 @@ def _make_fused_step(kernel: KernelFn, cfg: MBConfig):
     # rows are gather KEYS, and their kernel values are cache/Gram
     # gathers, so the streaming slab loop would also just multiply
     # lookups with zero memory win.  They take the composed passes below.
-    index_data = is_index_data(kernel)
-    precision = "bf16" if (cfg.compute_dtype == "bfloat16"
-                           and not index_data) else "f32"
-    cdt = jnp.bfloat16 if precision == "bf16" else None
+    prec = precision_plan(kernel, cfg)
+    index_data, precision, cdt = prec.index_data, prec.tag, prec.cdt
 
     def step(state: CenterState, x: jax.Array, batch_idx: jax.Array):
         k, w = state.idx.shape
@@ -257,16 +259,11 @@ def _make_fused_step(kernel: KernelFn, cfg: MBConfig):
 
 
 def _maybe_compress(step, kernel: KernelFn, cfg: MBConfig):
-    """Wrap a step with the in-loop landmark projection when the config
-    carries an active compress spec.  ``compress=None`` (and ``every=0``,
-    the round-cadence-only mode) return ``step`` itself — the emitted
-    program is the historical one, bit-for-bit (the ``cdt=None`` identity
-    convention)."""
-    spec = cfg.compress
-    if spec is None or spec.every <= 0:
-        return step
-    from repro.landmark.compress import wrap_step
-    return wrap_step(step, kernel, spec)
+    """The loop core's single compress-axis registration site
+    (:func:`repro.core.loop.compress_hook`), applied to a CenterState
+    step.  ``compress=None`` (and ``every=0``) return ``step`` itself —
+    the emitted program is the historical one, bit-for-bit."""
+    return compress_hook(step, kernel, cfg)
 
 
 def make_step(kernel: KernelFn, cfg: MBConfig):
@@ -284,21 +281,12 @@ def make_step(kernel: KernelFn, cfg: MBConfig):
                          "'fused')")
     rate_fn = get_rate(cfg.rate)
     b = cfg.batch_size
-    # kernel-eval compute dtype (SolverConfig precision="bf16"): cast the
-    # COORDINATES entering kernel evaluations, accumulate in f32 — the
-    # same convention as the sharded local step's _c.  Index-data kernels
-    # carry row ids as data, which a cast would corrupt; they always
-    # evaluate at full precision.  float32 (the default) is the identity:
-    # the emitted program is unchanged.
-    from repro.core.kernel_fns import is_index_data
-    cdt = jnp.bfloat16 if (cfg.compute_dtype == "bfloat16"
-                           and not is_index_data(kernel)) else None
-
-    def _c(v):
-        return v.astype(cdt) if cdt is not None else v
-
-    def _f32(v):
-        return v.astype(jnp.float32) if cdt is not None else v
+    # kernel-eval compute dtype (SolverConfig precision="bf16"): resolved
+    # by the loop core's single precision-axis site — cast the COORDINATES
+    # entering kernel evaluations, accumulate in f32.  float32 (the
+    # default) is the identity: the emitted program is unchanged.
+    prec = precision_plan(kernel, cfg)
+    cdt, _c, _f32 = prec.cdt, prec.cast, prec.f32
 
     def step(state: CenterState, x: jax.Array, batch_idx: jax.Array):
         k, w = state.idx.shape
@@ -486,7 +474,12 @@ def host_fit_loop(step, n: int, cfg: MBConfig, state, key: jax.Array,
     drawn values, the visited key stream and the returned carry key are
     identical to the blocking path (an early stop discards the prefetched
     draw without consuming its key advance) — results are bit-identical
-    either way (tested)."""
+    either way (tested).
+
+    This is a thin lowering over the shared host driver
+    (:func:`repro.core.loop.drive_fit_loop`): it supplies only the
+    key-stream batch producer and the step dispatch; the loop skeleton
+    (iteration/early-stop/prefetch/history) lives in the loop core."""
     if sampler not in ("iid", "nested"):
         raise ValueError(sampler)
     if sampler == "nested" and probs is not None:
@@ -506,22 +499,14 @@ def host_fit_loop(step, n: int, cfg: MBConfig, state, key: jax.Array,
         return key, sample_batch_nested(key, i, n, cfg.batch_size,
                                         reuse=reuse, refresh=refresh)
 
-    history = []
-    end = step0 + cfg.max_iters
-    pending = None
-    for i in range(step0, end):
-        key_next, bidx = pending if pending is not None else draw(key, i)
-        pending = None
-        state, info = step(state, bidx)       # async dispatch
-        if prefetch and i + 1 < end:
-            knx, bnx = draw(key_next, i + 1)  # overlaps the device step
-            pending = (knx, jax.device_put(bnx))
-        imp = float(info.improvement)         # host sync point
-        key = key_next
-        history.append(dict(step=i, f_before=float(info.f_before),
-                            f_after=float(info.f_after), improvement=imp))
-        if early_stop and imp < cfg.epsilon:
-            break
+    def dispatch(bidx):
+        nonlocal state
+        state, info = step(state, bidx)
+        return info
+
+    history, key = drive_fit_loop(
+        dispatch, draw, key, max_iters=cfg.max_iters, epsilon=cfg.epsilon,
+        early_stop=early_stop, prefetch=prefetch, step0=step0)
     return state, history, key
 
 
@@ -588,37 +573,9 @@ def fit_cached(x: jax.Array, kernel: KernelFn, cfg: MBConfig, key: jax.Array,
                               store_dtype=store_dtype)
 
 
-def run_early_stopped_keyed(cfg: MBConfig, step_with_key, state,
-                            key: jax.Array):
-    """The paper's on-device early-stopped driver, shared by every fit path
-    (fit_jit, the multi-restart engine, the distributed loop): while
-    i < max_iters and the last improvement >= epsilon, advance the unified
-    batch-key stream (:func:`repro.api.keys.next_batch_key`) and apply
-    ``step_with_key(state, kb) -> (state, improvement)``.
-    Returns (state, iters, key) — the carried key resumes the stream
-    exactly where the loop stopped (``KernelKMeans.partial_fit``)."""
-
-    def cond(carry):
-        _, _, i, imp = carry
-        return (i < cfg.max_iters) & (imp >= cfg.epsilon)
-
-    def body(carry):
-        state, key, i, _ = carry
-        key, kb = api_keys.next_batch_key(key)
-        state, imp = step_with_key(state, kb)
-        return state, key, i + 1, imp
-
-    init_carry = (state, key, jnp.zeros((), jnp.int32),
-                  jnp.full((), jnp.inf, jnp.float32))
-    state, key, iters, _ = jax.lax.while_loop(cond, body, init_carry)
-    return state, iters, key
-
-
-def run_early_stopped(cfg: MBConfig, step_with_key, state, key: jax.Array):
-    """:func:`run_early_stopped_keyed` without the carried key — the
-    historical signature, kept for callers that never resume."""
-    state, iters, _ = run_early_stopped_keyed(cfg, step_with_key, state, key)
-    return state, iters
+# run_early_stopped_keyed / run_early_stopped — the paper's on-device
+# early-stopped driver — moved to repro.core.loop (re-exported above): the
+# lax.while_loop skeleton now exists exactly once, in the loop core.
 
 
 def sampled_step_with_key(step, x: jax.Array, cfg: MBConfig):

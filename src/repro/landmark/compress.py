@@ -23,9 +23,12 @@ The op is shape-preserving: the (k, W) window arrays keep their shapes
 with the first m slots holding the landmarks and the rest zeroed (the
 ``coef == 0`` empty-slot convention), and the ring head resets to m — so
 the SAME compiled Algorithm-2 step keeps running afterwards, which is what
-lets every executor trigger compression inside its loop (``wrap_step`` /
-``wrap_local_step`` below, hooked by ``core.minibatch.make_step`` and
-``core.distributed._make_local_step``).
+lets every executor trigger compression inside its loop.  The cadence
+hook registers ONCE, in the fit-loop core —
+:func:`repro.core.loop.compress_hook` wraps ``wrap_step`` /
+``wrap_local_step`` below for both the single-device and the shard-local
+step bodies (docs/architecture.md); executors opt in through their
+``LoopSpec`` hooks rather than wiring the cadence themselves.
 """
 from __future__ import annotations
 

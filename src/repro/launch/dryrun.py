@@ -18,7 +18,6 @@ Outputs one JSON per cell under experiments/dryrun/ with:
 """
 import argparse
 import json
-import re
 import time
 import traceback
 
@@ -38,42 +37,12 @@ PEAK_FLOPS = 197e12        # bf16 per chip
 HBM_BW = 819e9             # bytes/s per chip
 ICI_BW = 50e9              # bytes/s per link
 
-COLLECTIVE_RE = re.compile(
-    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+# HLO analysis (collective-byte parsing, memory/cost summaries) lives in
+# repro.launch.analysis so in-process callers (KernelKMeans.explain,
+# serve --dry-run) can use it without this module's XLA_FLAGS side effect.
+from repro.launch.analysis import (  # noqa: E402,F401
+    COLLECTIVE_RE, DTYPE_BYTES, SHAPE_RE, collective_bytes_of,
 )
-SHAPE_RE = re.compile(r"\b([a-z]+\d+)\[([\d,]*)\]")
-DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
-               "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
-               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
-
-
-def collective_bytes_of(hlo_text: str) -> dict:
-    """Sum operand bytes of every collective op in the compiled HLO (the
-    spec's §Roofline recipe).  Falls back to the result shape when operand
-    shapes are not printed on the line."""
-    totals = {}
-    for line in hlo_text.splitlines():
-        m = COLLECTIVE_RE.search(line)
-        if not m or "=" not in line:
-            continue
-        op = m.group(1)
-        # shapes on the line: first = result, rest = operands
-        shapes = SHAPE_RE.findall(line)
-        if not shapes:
-            continue
-        operands = shapes[1:] if len(shapes) > 1 else shapes[:1]
-        nbytes = 0
-        for dt, dims in operands:
-            if dt not in DTYPE_BYTES:
-                continue
-            n = 1
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-            nbytes += n * DTYPE_BYTES[dt]
-        totals[op] = totals.get(op, 0) + nbytes
-    totals["total"] = sum(v for k, v in totals.items() if k != "total")
-    return totals
 
 
 def model_flops_estimate(cfg, shape) -> float:

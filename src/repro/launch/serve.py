@@ -216,6 +216,49 @@ def serve_cluster_cached(args):
     print(telemetry.format_line(t))
 
 
+def serve_dryrun(args):
+    """``--dry-run``: resolve the clustering plan for the requested shape
+    and print its lowering onto the fit-loop core (``KernelKMeans
+    .explain()``) — which solver, which sampler/step body/placement, the
+    donation signature, the active cross-cutting hooks and the canonical
+    stage sequence — without touching data or compiling a fit.  With
+    ``--cluster`` flags this describes exactly the plan ``serve
+    --cluster`` would run."""
+    from repro.api import KernelKMeans, SolverConfig
+    from repro.launch.mesh import make_restart_mesh
+
+    mesh = None
+    kw = dict(k=args.k, batch_size=args.batch_size, tau=args.tau,
+              max_iters=args.max_iters, kernel="rbf",
+              kernel_params={"kappa": 1.0})
+    if args.restarts > 1:
+        kw.update(cache="none", distribution="single",
+                  restarts=args.restarts)
+        mesh = make_restart_mesh(args.restarts)
+    est = KernelKMeans(SolverConfig(**kw), mesh=mesh)
+    info = est.explain(n=args.n, d=args.d, deep=args.deep)
+    print(f"plan [{info['plan']}] for n={info['n']}:")
+    cfgline = ", ".join(f"{k}={v!r}" for k, v in info["config"].items())
+    print(f"  config: {cfgline}")
+    low = info["lowering"]
+    for f in ("driver", "sampler", "step", "placement", "donation",
+              "hooks"):
+        print(f"  {f}: {low[f]}")
+    print("  stages:")
+    for i, s in enumerate(info["stages"]):
+        print(f"    {i + 1}. {s}")
+    if "compiled_step" in info:
+        cs = info["compiled_step"]
+        if "note" in cs:
+            print(f"  compiled step: {cs['note']}")
+        else:
+            mem, cost = cs["memory"], cs["cost"]
+            print(f"  compiled step: peak {mem['peak_bytes']} B, "
+                  f"{cost['flops_per_device']:.3e} flops, "
+                  f"{cost['bytes_per_device']:.3e} B accessed, "
+                  f"collective {cs['collectives']['total']} B")
+
+
 def serve_service(args):
     """Always-on clustering service demo (repro.service): a learner
     thread runs continuous partial_fit over the bounded ingest buffer and
@@ -288,6 +331,15 @@ def main():
                     default="lru")
     ap.add_argument("--cache-tile", type=int, default=512)
     ap.add_argument("--cache-capacity", type=int, default=16)
+    # plan inspection (docs/architecture.md)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the resolved clustering plan's lowering "
+                         "onto the fit-loop core (KernelKMeans.explain) "
+                         "and exit — no data, no fit")
+    ap.add_argument("--deep", action="store_true",
+                    help="with --dry-run: also .lower().compile() the "
+                         "step program and print its HLO memory/cost "
+                         "analysis")
     # always-on service demo (repro.service)
     ap.add_argument("--service", action="store_true",
                     help="run the learner/actor service demo "
@@ -313,6 +365,9 @@ def main():
                     default="uniform")
     args = ap.parse_args()
 
+    if args.dry_run:
+        serve_dryrun(args)
+        return
     if args.service:
         serve_service(args)
         return

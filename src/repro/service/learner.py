@@ -11,7 +11,10 @@ Why this is deterministic (and therefore recoverable): the buffer content
 at round ``t`` is a pure function of ``(ingest seed, t)`` given the
 deterministic arrival stream (:mod:`repro.service.buffer`), and the batch
 indices drawn inside ``partial_fit`` are a pure function of the carried
-PRNG fit key — which rides the published carry.  So
+PRNG fit key — which rides the published carry (the unified
+:class:`repro.core.loop.FitCarry` every lowering threads through the
+fit-loop core, so the learner resumes identically on whichever driver
+the resolved plan uses — docs/architecture.md).  So
 :func:`repro.train.resilience.run_resilient` can crash anywhere, restore
 the last PUBLISHED snapshot (the snapshot is the checkpoint —
 ``SnapshotStore.as_checkpointer``), rewind the buffer by replaying the

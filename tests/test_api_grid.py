@@ -513,6 +513,100 @@ def test_compress_jit_matches_host():
                                   np.asarray(ej.state_.idx))
 
 
+# ----------------------------------- fit -> save -> load -> partial_fit
+# The resumable family ("single", restarts=1) swept across every axis it
+# composes with: jit x sampler x step x precision x prefetch x compress.
+# Contract (PR-9): fit(a); save; load; partial_fit(b) is BIT-identical to
+# fit(a); partial_fit(b) on every lowering — the loop core's FitCarry
+# (center state, carried PRNG fit key, step cursor) survives
+# serialization exactly, regardless of which driver produced it.
+
+_RESUME_GRID = {
+    "host": dict(jit=False),
+    "host_noprefetch": dict(jit=False, prefetch=False),
+    "host_nested": dict(jit=False, sampler="nested"),
+    "host_fused": dict(jit=False, step="fused"),
+    "host_bf16": dict(jit=False, precision="bf16"),
+    "host_compress": dict(jit=False, compress=_COMPRESS),
+    "device": dict(jit=True),
+    "device_nested": dict(jit=True, sampler="nested"),
+    "device_fused": dict(jit=True, step="fused"),
+    "device_bf16": dict(jit=True, precision="bf16"),
+    "device_compress": dict(jit=True, compress=_COMPRESS),
+}
+
+_CARRY_FIELDS = ("idx", "coef", "sqnorm", "counts", "head")
+
+
+@pytest.mark.parametrize("point", sorted(_RESUME_GRID))
+def test_fit_save_load_partial_fit_bit_identical(point, tmp_path):
+    from repro.core.loop import FitCarry, carry_of
+
+    kw = _RESUME_GRID[point]
+    x, b = _blobs(seed=0), _blobs(seed=3)
+    cfg = _cfg(cache="none", distribution="single", **kw)
+    ref = KernelKMeans(cfg).fit(x, KEY)
+    est = KernelKMeans(cfg).fit(x, KEY)
+    p = str(tmp_path / f"{point}.npz")
+    est.save(p)
+    loaded = KernelKMeans.load(p)
+    # the shared carry round-trips exactly: state, fit key and cursor
+    ca, cb = carry_of(est._outcome), carry_of(loaded._outcome)
+    assert isinstance(cb, FitCarry)
+    assert (ca.steps, ca.iters) == (cb.steps, cb.iters)
+    np.testing.assert_array_equal(np.asarray(ca.key), np.asarray(cb.key))
+    ref.partial_fit(b, iters=4)
+    loaded.partial_fit(b, iters=4)
+    assert loaded.plan_.name == "single"
+    for f in _CARRY_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(ref.state_, f)),
+                                      np.asarray(getattr(loaded.state_, f)),
+                                      err_msg=f"{point}:{f}")
+    assert int(ref.iters_) == int(loaded.iters_)
+
+
+# Non-resumable families: the serving tuple round-trips bit-exactly and
+# the loaded estimator refuses partial_fit the same way the fitted plan
+# would (no carry is silently fabricated).
+
+_SERVE_GRID = {
+    "precomputed": (dict(cache="precomputed", distribution="single",
+                         jit=True), None),
+    "single_lru": (dict(cache="lru", distribution="single", jit=False,
+                        cache_tile=32, cache_capacity=8), None),
+    "sharded_jit": (dict(cache="none", distribution="sharded", jit=True),
+                    "mesh"),
+    "sharded_host": (dict(cache="none", distribution="sharded",
+                          jit=False), "mesh"),
+    "sharded_lru": (dict(cache="lru", distribution="sharded", jit=True,
+                         cache_tile=32, cache_capacity=16), "mesh"),
+    "multi_restart": (dict(cache="none", distribution="single",
+                           restarts=2), None),
+    "fused_restart": (dict(cache="none", distribution="sharded", jit=True,
+                           restarts=2), "fused_mesh"),
+}
+
+
+@pytest.mark.parametrize("point", sorted(_SERVE_GRID))
+def test_save_load_serving_roundtrip_grid(point, tmp_path):
+    kw, mesh_kind = _SERVE_GRID[point]
+    x = _blobs()
+    est = KernelKMeans(_cfg(**kw), mesh=_mesh_of(mesh_kind)).fit(x, KEY)
+    p = str(tmp_path / f"{point}.npz")
+    est.save(p)
+    loaded = KernelKMeans.load(p)
+    np.testing.assert_array_equal(np.asarray(loaded.predict(x[:64])),
+                                  np.asarray(est.predict(x[:64])),
+                                  err_msg=point)
+    np.testing.assert_allclose(np.asarray(loaded.transform(x[:16])),
+                               np.asarray(est.transform(x[:16])),
+                               atol=1e-6, err_msg=point)
+    assert loaded._outcome is None      # serving-only: no resumable carry
+    if mesh_kind is None:
+        with pytest.raises(NotImplementedError, match="partial_fit"):
+            loaded.partial_fit(x)
+
+
 # -------------------------------------------------- pad-and-mask (1 device)
 def test_n_valid_none_matches_legacy_bound_single_shard():
     """n_valid == full rows on a 1-shard mesh: the masked sampler bound is

@@ -1,0 +1,136 @@
+"""repro.api.keys — the ONE audited PRNG derivation tree (PR-9 satellite).
+
+Three layers of protection:
+
+1. every helper is pinned to its documented primitive (``split_init`` IS
+   ``jax.random.split``'s pair, ``shard_key`` IS ``fold_in``, ...) so a
+   refactor cannot silently change any plan's batch sequence;
+2. ``derive_fit_keys`` (formerly ``executors._derive_keys``) is pinned to
+   its three documented branches, including the legacy
+   ``always_split=False`` bit-exactness contract;
+3. a source audit asserts the fit-loop modules contain NO raw
+   ``jax.random.split`` call — every fit path derives its keys through
+   this module, so the derivation exists exactly once.
+"""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import keys as api_keys
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+
+
+def _eq(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_as_key_coerces_seed_and_passes_keys_through():
+    k = api_keys.as_key(7)
+    _eq(k, jax.random.PRNGKey(7))
+    _eq(api_keys.as_key(k), k)
+
+
+def test_split_init_is_one_split():
+    key = jax.random.PRNGKey(3)
+    init_key, fit_key = api_keys.split_init(key)
+    ref = jax.random.split(key)
+    _eq(init_key, ref[0])
+    _eq(fit_key, ref[1])
+
+
+def test_next_batch_key_is_one_split_and_deterministic():
+    key = jax.random.PRNGKey(11)
+    k1, kb1 = api_keys.next_batch_key(key)
+    ref = jax.random.split(key)
+    _eq(k1, ref[0])
+    _eq(kb1, ref[1])
+    k2, kb2 = api_keys.next_batch_key(key)
+    _eq(k1, k2)
+    _eq(kb1, kb2)
+
+
+def test_shard_key_is_fold_in():
+    kb = jax.random.PRNGKey(5)
+    for r in (0, 1, 7):
+        _eq(api_keys.shard_key(kb, jnp.int32(r)),
+            jax.random.fold_in(kb, jnp.int32(r)))
+
+
+def test_restart_keys_is_three_way_split():
+    key = jax.random.PRNGKey(13)
+    ki, kf, ke = api_keys.restart_keys(key)
+    ref = jax.random.split(key, 3)
+    _eq(ki, ref[0])
+    _eq(kf, ref[1])
+    _eq(ke, ref[2])
+
+
+def test_per_restart_is_r_way_split():
+    key = jax.random.PRNGKey(17)
+    _eq(api_keys.per_restart(key, 4), jax.random.split(key, 4))
+
+
+def test_batch_key_at_replays_the_stream():
+    """batch_key_at(fit_key, t) == the t-th kb of the next_batch_key
+    stream — the resumable-pipeline contract."""
+    fit_key = api_keys.split_init(jax.random.PRNGKey(23))[1]
+    key = fit_key
+    for t in range(6):
+        key, kb = api_keys.next_batch_key(key)
+        _eq(api_keys.batch_key_at(fit_key, t), kb)
+
+
+@pytest.mark.parametrize("always_split", [True, False])
+def test_derive_fit_keys_no_init_splits_once(always_split):
+    key = jax.random.PRNGKey(29)
+    init_key, fit_key = api_keys.derive_fit_keys(key, False, always_split)
+    ref_i, ref_f = api_keys.split_init(key)
+    _eq(init_key, ref_i)
+    _eq(fit_key, ref_f)
+
+
+def test_derive_fit_keys_init_given_estimator_branch():
+    """always_split=True still burns the init split: the batch stream is
+    identical whether the caller or the estimator drew the init."""
+    key = jax.random.PRNGKey(31)
+    init_key, fit_key = api_keys.derive_fit_keys(key, True, True)
+    assert init_key is None
+    _eq(fit_key, api_keys.split_init(key)[1])
+    _eq(fit_key, api_keys.derive_fit_keys(key, False, True)[1])
+
+
+def test_derive_fit_keys_legacy_branch_is_identity():
+    """always_split=False with an explicit init: the root key IS the fit
+    key — the historical shims' bit-exactness contract."""
+    key = jax.random.PRNGKey(37)
+    init_key, fit_key = api_keys.derive_fit_keys(key, True, False)
+    assert init_key is None
+    _eq(fit_key, key)
+
+
+# ---------------------------------------------------------------- audit
+FIT_LOOP_MODULES = [
+    "api/executors.py",
+    "core/loop.py",
+    "core/minibatch.py",
+    "core/distributed.py",
+    "core/engine.py",
+]
+
+
+def test_keys_module_owns_the_split():
+    assert "jax.random.split(" in (SRC / "api" / "keys.py").read_text()
+
+
+@pytest.mark.parametrize("rel", FIT_LOOP_MODULES)
+def test_no_raw_key_split_in_fit_loop_modules(rel):
+    """The fit-loop layers never call jax.random.split directly — all key
+    derivation routes through repro.api.keys (one audited tree; a stray
+    split would silently fork a plan's batch sequence)."""
+    text = (SRC / rel).read_text()
+    assert "jax.random.split(" not in text, (
+        f"{rel} derives keys outside repro.api.keys")

@@ -1,0 +1,230 @@
+"""Legacy ``fit_*`` shims vs the refactored loop-core drivers (PR-9).
+
+One pin per executor family.  Each deprecated core-level entry point must
+
+1. warn EXACTLY ONCE per process with a DeprecationWarning that names its
+   :class:`repro.api.SolverConfig` replacement (repeat calls are silent),
+2. stay deterministic across calls, and
+3. return BIT-exactly what the refactored executor produces for the same
+   keys under the shims' historical ``always_split=False`` contract —
+   the PR-9 refactor moved the loop skeleton into ``repro.core.loop``,
+   and the shims must not have drifted off the new drivers.
+
+The ``repro.api.legacy`` adapters are exercised implicitly (every core
+shim delegates through them); the direct-executor twin is the
+non-tautological side of the pin.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import SolverConfig
+from repro.api.deprecation import reset_warnings
+from repro.api.plan import resolve_plan
+from repro.core import MBConfig
+from repro.core.kernel_fns import Gaussian
+from repro.data import blobs
+
+GAUSS = Gaussian(kappa=jnp.float32(1.5))
+KEY = jax.random.PRNGKey(21)
+MB = MBConfig(k=4, batch_size=32, tau=16, epsilon=-1.0, max_iters=6)
+IDX0 = jnp.asarray([5, 60, 120, 200], dtype=jnp.int32)
+
+_CS_FIELDS = ("idx", "coef", "sqnorm", "counts", "head")
+_DS_FIELDS = ("pts", "coef", "sqnorm", "counts", "head")
+
+
+def _blobs(n=256, d=8, k=4, seed=0):
+    x, _ = blobs(n=n, d=d, k=k, seed=seed)
+    return jnp.asarray(x)
+
+
+def _scfg(**axes):
+    return SolverConfig(k=MB.k, batch_size=MB.batch_size, tau=MB.tau,
+                        epsilon=MB.epsilon, max_iters=MB.max_iters,
+                        kernel=GAUSS, **axes)
+
+
+def _mesh1():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+
+
+def _assert_fields_equal(a, b, fields, ctx):
+    for name in fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, name)),
+                                      np.asarray(getattr(b, name)),
+                                      err_msg=f"{ctx}:{name}")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warning_state():
+    """Each pin observes the warn-once behavior from a clean slate (other
+    test modules may already have warmed the per-process set)."""
+    reset_warnings()
+    yield
+    reset_warnings()
+
+
+def _call_twice_warns_once(shim_name, fn, *args, **kwargs):
+    """Run the shim twice; assert exactly one DeprecationWarning naming
+    the replacement surface.  Returns (first_result, second_result)."""
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out1 = fn(*args, **kwargs)
+        out2 = fn(*args, **kwargs)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+           and shim_name in str(w.message)]
+    assert len(dep) == 1, (shim_name,
+                           [str(w.message) for w in rec])
+    assert "repro.api" in str(dep[0].message)
+    return out1, out2
+
+
+# ------------------------------------------------------------------ single
+def test_shim_fit_single_host():
+    from repro.core import fit as core_fit
+
+    x = _blobs()
+    (st1, h1), (st2, h2) = _call_twice_warns_once(
+        "repro.core.fit", core_fit, x, GAUSS, MB, KEY, early_stop=False)
+    _assert_fields_equal(st1, st2, _CS_FIELDS, "repeat")
+    assert h1 == h2
+    ex = resolve_plan(_scfg(cache="none", distribution="single", jit=False,
+                            early_stop=False),
+                      n=x.shape[0], solver="single").executor
+    out = ex.fit(x, KEY, always_split=False)
+    _assert_fields_equal(st1, out.state, _CS_FIELDS, "executor")
+    assert h1 == out.history
+
+
+def test_shim_fit_jit():
+    from repro.core import fit_jit as core_fit_jit
+
+    x = _blobs()
+    (st1, it1), (st2, it2) = _call_twice_warns_once(
+        "repro.core.fit_jit", core_fit_jit, x, GAUSS, MB, KEY, IDX0)
+    _assert_fields_equal(st1, st2, _CS_FIELDS, "repeat")
+    assert int(it1) == int(it2)
+    ex = resolve_plan(_scfg(cache="none", distribution="single", jit=True),
+                      n=x.shape[0], solver="single").executor
+    out = ex.fit(x, KEY, init_idx=IDX0, always_split=False)
+    _assert_fields_equal(st1, out.state, _CS_FIELDS, "executor")
+    assert int(it1) == int(out.iters)
+
+
+# -------------------------------------------------------------- single_lru
+def test_shim_fit_cached():
+    from repro.cache import stats
+    from repro.core.minibatch import fit_cached as core_fit_cached
+
+    x = _blobs()
+    (st1, h1, ck1), (st2, h2, ck2) = _call_twice_warns_once(
+        "repro.core.fit_cached", core_fit_cached, x, GAUSS, MB, KEY,
+        tile=32, capacity=8, early_stop=False)
+    _assert_fields_equal(st1, st2, _CS_FIELDS, "repeat")
+    ex = resolve_plan(_scfg(cache="lru", distribution="single", jit=False,
+                            early_stop=False, cache_tile=32,
+                            cache_capacity=8),
+                      n=x.shape[0], solver="single_lru").executor
+    out = ex.fit(x, KEY, always_split=False)
+    _assert_fields_equal(st1, out.state, _CS_FIELDS, "executor")
+    assert h1 == out.history
+    assert stats(ck1.cache) == stats(out.cache.cache)
+
+
+# ----------------------------------------------------------------- sharded
+def test_shim_fit_distributed_stream():
+    from repro.core.distributed import fit_distributed as core_fd
+
+    x = _blobs()
+    batches = [np.asarray(x[i * 32:(i + 1) * 32]) for i in range(6)]
+    mesh = _mesh1()
+    # the stream is consumed per call: hand each call a fresh iterator
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        st1, h1 = core_fd(iter(list(batches)), x[IDX0], GAUSS, MB, mesh,
+                          early_stop=False)
+        st2, h2 = core_fd(iter(list(batches)), x[IDX0], GAUSS, MB, mesh,
+                          early_stop=False)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+           and "fit_distributed" in str(w.message)]
+    assert len(dep) == 1, [str(w.message) for w in rec]
+    _assert_fields_equal(st1, st2, _DS_FIELDS, "repeat")
+    # the shim pins prefetch=False (caller-owned iterator advance
+    # contract); the executor twin must match under the same axis
+    ex = resolve_plan(_scfg(cache="none", distribution="sharded",
+                            jit=False, early_stop=False, prefetch=False),
+                      mesh=mesh, solver="sharded").executor
+    st3, h3 = ex.fit_stream(iter(list(batches)), x[IDX0], mb=MB)
+    _assert_fields_equal(st1, st3, _DS_FIELDS, "executor")
+    assert len(h1) == len(h3)
+    for a, b in zip(h1, h3):
+        assert a == b
+
+
+def test_shim_fit_distributed_jit():
+    from repro.core.distributed import fit_distributed_jit as core_fdj
+
+    x = _blobs()
+    mesh = _mesh1()
+    (st1, it1), (st2, it2) = _call_twice_warns_once(
+        "repro.core.distributed.fit_distributed_jit", core_fdj,
+        x, x[IDX0], GAUSS, MB, mesh, KEY)
+    _assert_fields_equal(st1, st2, _DS_FIELDS, "repeat")
+    assert int(it1) == int(it2)
+    ex = resolve_plan(_scfg(cache="none", distribution="sharded",
+                            jit=True),
+                      n=x.shape[0], mesh=mesh, solver="sharded").executor
+    out = ex.fit(x, KEY, center_pts=x[IDX0], always_split=False,
+                 strict=True)
+    _assert_fields_equal(st1, out.state, _DS_FIELDS, "executor")
+    assert int(it1) == int(out.iters)
+
+
+# ------------------------------------------------------------- sharded_lru
+def test_shim_fit_distributed_cached_jit():
+    from repro.core.distributed import (
+        fit_distributed_cached_jit as core_fdcj)
+
+    x = _blobs()
+    mesh = _mesh1()
+    (st1, caches1, it1), (st2, _, it2) = _call_twice_warns_once(
+        "repro.core.distributed.fit_distributed_cached_jit", core_fdcj,
+        x, IDX0, GAUSS, MB, mesh, KEY, tile=32, capacity=16)
+    _assert_fields_equal(st1, st2, _DS_FIELDS, "repeat")
+    assert int(it1) == int(it2)
+    ex = resolve_plan(_scfg(cache="lru", distribution="sharded", jit=True,
+                            cache_tile=32, cache_capacity=16),
+                      n=x.shape[0], mesh=mesh,
+                      solver="sharded_lru").executor
+    out = ex.fit(x, KEY, init_idx=IDX0, always_split=False, strict=True)
+    _assert_fields_equal(st1, out.state, _DS_FIELDS, "executor")
+    assert int(it1) == int(out.iters)
+    from repro.cache import stats
+    s1 = stats(jax.tree.map(lambda a: a[0], caches1))
+    s2 = stats(jax.tree.map(lambda a: a[0], out.caches))
+    assert s1 == s2
+
+
+# ----------------------------------------------------------- multi_restart
+def test_shim_fit_restarts():
+    from repro.core.engine import fit_restarts as core_fr
+
+    x = _blobs()
+    res1, res2 = _call_twice_warns_once(
+        "repro.core.fit_restarts", core_fr, x, GAUSS, MB, KEY, 2)
+    np.testing.assert_array_equal(np.asarray(res1.objectives),
+                                  np.asarray(res2.objectives))
+    assert int(res1.best) == int(res2.best)
+    ex = resolve_plan(_scfg(cache="none", distribution="single", jit=True,
+                            restarts=2),
+                      n=x.shape[0], solver="multi_restart").executor
+    res3 = ex.fit(x, KEY).engine
+    np.testing.assert_array_equal(np.asarray(res1.objectives),
+                                  np.asarray(res3.objectives))
+    assert int(res1.best) == int(res3.best)
+    _assert_fields_equal(res1.state, res3.state, _CS_FIELDS, "executor")

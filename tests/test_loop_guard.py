@@ -1,0 +1,111 @@
+"""Structural guard: the fit loop exists EXACTLY once (PR-9 tentpole).
+
+Every registered solver must route through :mod:`repro.core.loop` — no
+executor family (nor the core modules they compose) may own a
+``lax.while_loop`` / ``fori_loop`` fit loop or a hand-rolled host driver.
+The scan is AST-based, so docstrings and comments mentioning while_loop
+don't trip it; a regression here means someone re-inlined a loop skeleton
+that PRs 5 and 7 had to thread cross-cutting axes through seven times.
+"""
+import ast
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import KernelKMeans, SolverConfig
+from repro.api.executors import Executor
+from repro.api.plan import list_solvers
+from repro.core import loop as loop_lib
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+
+# Modules that compose the loop core and therefore must not re-own the
+# loop skeleton.  core/loop.py is the single allowed home.
+GUARDED = [
+    "api/executors.py",
+    "api/estimator.py",
+    "api/legacy.py",
+    "core/minibatch.py",
+    "core/distributed.py",
+    "core/engine.py",
+]
+
+BANNED_CALLS = {"while_loop", "fori_loop"}
+
+
+def _loop_calls(path: pathlib.Path):
+    """Names of banned loop-driver calls + hand-rolled while statements."""
+    tree = ast.parse(path.read_text())
+    hits = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            fn = node.func
+            name = fn.attr if isinstance(fn, ast.Attribute) else \
+                getattr(fn, "id", None)
+            if name in BANNED_CALLS:
+                hits.append(f"{name} at line {node.lineno}")
+        elif isinstance(node, ast.While):
+            hits.append(f"while-statement at line {node.lineno}")
+    return hits
+
+
+@pytest.mark.parametrize("rel", GUARDED)
+def test_no_fit_loop_outside_the_loop_core(rel):
+    hits = _loop_calls(SRC / rel)
+    assert not hits, (f"{rel} owns a loop skeleton ({hits}); lower onto "
+                      "repro.core.loop instead")
+
+
+def test_loop_core_owns_the_while_loop():
+    hits = _loop_calls(SRC / "core" / "loop.py")
+    assert any("while_loop" in h for h in hits), (
+        "core/loop.py no longer owns the lax.while_loop device driver")
+
+
+def test_every_executor_family_declares_a_lowering():
+    """Each concrete executor must describe how it lowers onto the loop
+    core (LoopSpec) — the explain()/dry-run surface."""
+    def concrete(cls):
+        out = []
+        for sub in cls.__subclasses__():
+            if getattr(sub, "name", "?") != "?":
+                out.append(sub)
+            out.extend(concrete(sub))
+        return out
+
+    families = concrete(Executor)
+    registered = set(list_solvers())
+    covered = {cls.name for cls in families}
+    assert registered <= covered, registered - covered
+    for cls in families:
+        assert cls.loop_spec is not Executor.loop_spec, (
+            f"{cls.__name__} does not declare its LoopSpec lowering")
+
+
+def _data(n=256, d=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+
+
+@pytest.mark.parametrize("kw", [
+    dict(cache="none", distribution="single", jit=False),   # host driver
+    dict(cache="none", distribution="single", jit=True),    # device driver
+    dict(cache="precomputed", distribution="single", jit=True),
+])
+def test_fits_run_through_the_loop_core(kw):
+    """Fitting any plan bumps the loop core's run counter — the drivers
+    in core/loop.py are actually on the execution path, not just
+    imported.  (Device drivers count at trace time, so the program cache
+    is cleared and a fresh executor used.)"""
+    loop_lib.clear_program_cache()
+    x = _data()
+    est = KernelKMeans(SolverConfig(k=4, batch_size=32, tau=16,
+                                    max_iters=3, epsilon=-1.0, **kw))
+    before = loop_lib.loop_runs()
+    est.fit(x, key=0)
+    jax.block_until_ready(est.state_.sqnorm)
+    assert loop_lib.loop_runs() > before, (
+        f"plan {est.plan_.name!r} fit without entering the loop core")
