@@ -18,7 +18,11 @@ state round-trip for serving processes.
 """
 from __future__ import annotations
 
+import io
 import json
+import struct
+import zipfile
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -37,6 +41,38 @@ from repro.core.state import CenterState
 # the kernel spec, which save() lowers to (name, params)).
 _JSON_FIELDS = tuple(f for f in field_names()
                      if f not in ("kernel", "kernel_params"))
+
+# format-3 integrity footer: the npz payload is followed by 8 bytes —
+# a 4-byte magic + the CRC32 of the payload.  Disk corruption anywhere
+# in the file (payload OR footer) fails verification; the zip container
+# alone catches truncation but not in-place bit flips.
+_CRC_MAGIC = b"KKC3"
+_CRC_FOOTER = struct.Struct("<4sI")
+
+
+class SnapshotIntegrityError(RuntimeError):
+    """Snapshot file failed its integrity check (CRC mismatch, truncated
+    or undecodable container) — the bytes on disk are not the bytes that
+    were saved.  Callers must treat the file as garbage: quarantine and
+    fall back, never serve from it."""
+
+
+def _verified_payload(path: str) -> bytes:
+    """The npz payload of ``path`` with its format-3 CRC footer verified
+    and stripped.  Legacy files (format 1/2, no footer) pass through
+    whole — their container parse is their only integrity check."""
+    with open(path, "rb") as f:
+        raw = f.read()
+    if len(raw) >= _CRC_FOOTER.size:
+        magic, crc = _CRC_FOOTER.unpack(raw[-_CRC_FOOTER.size:])
+        if magic == _CRC_MAGIC:
+            payload = raw[:-_CRC_FOOTER.size]
+            if zlib.crc32(payload) != crc:
+                raise SnapshotIntegrityError(
+                    f"CRC mismatch in {path}: stored {crc:#010x}, "
+                    f"computed {zlib.crc32(payload):#010x}")
+            return payload
+    return raw
 
 
 class KernelKMeans:
@@ -385,9 +421,14 @@ class KernelKMeans:
         # format 2 (the compressed-representation bump): adds "format" and
         # "compress" meta keys; the serving arrays may be a landmark-
         # compressed (k*m)-row representation while the carry arrays stay
-        # the full resumable window.  load() still accepts format-1 files
-        # (no "format" key) unchanged — see tests/test_save_load_skew.py.
-        meta = {"format": 2, "kernel": name, "kernel_params": params,
+        # the full resumable window.
+        # format 3 (the integrity bump): the same npz payload followed by
+        # an 8-byte CRC32 footer so disk corruption is DETECTED at load
+        # time (SnapshotIntegrityError) instead of silently decoding to
+        # garbage centers.  load() still accepts format-1 files (no
+        # "format" key) and footer-less format-2 files unchanged — see
+        # tests/test_save_load_skew.py.
+        meta = {"format": 3, "kernel": name, "kernel_params": params,
                 "config": {f: getattr(self.config, f)
                            for f in _JSON_FIELDS},
                 "compress": self._compress_stats}
@@ -407,9 +448,13 @@ class KernelKMeans:
                              "solver": (self.plan_.name
                                         if self.plan_ is not None
                                         else self._carry_solver)}
+        buf = io.BytesIO()
+        np.savez(buf, meta=np.frombuffer(
+            json.dumps(meta).encode(), dtype=np.uint8), **arrays)
+        payload = buf.getvalue()
         with open(path, "wb") as f:
-            np.savez(f, meta=np.frombuffer(
-                json.dumps(meta).encode(), dtype=np.uint8), **arrays)
+            f.write(payload)
+            f.write(_CRC_FOOTER.pack(_CRC_MAGIC, zlib.crc32(payload)))
         return path
 
     @classmethod
@@ -419,24 +464,33 @@ class KernelKMeans:
         ``partial_fit``-capable plan), the estimator is also RESUMABLE:
         ``partial_fit(X)`` continues the batch-key stream exactly where
         the saved fit stopped."""
-        with np.load(path) as data:
-            meta = json.loads(bytes(data["meta"]).decode())
-            sup = jnp.asarray(data["sup"])
-            coef = jnp.asarray(data["coef"])
-            sqnorm = jnp.asarray(data["sqnorm"])
-            carry = None
-            if "carry_key" in data:
-                state = CenterState(*(jnp.asarray(data[f"carry_{f}"])
-                                      for f in CenterState._fields))
-                cmeta = meta["carry"]
-                carry = FitCarry(state=state,
-                                 key=jnp.asarray(data["carry_key"]),
-                                 steps=cmeta["steps"],
-                                 iters=cmeta["iters"])
+        payload = _verified_payload(path)
+        try:
+            with np.load(io.BytesIO(payload)) as data:
+                meta = json.loads(bytes(data["meta"]).decode())
+                sup = jnp.asarray(data["sup"])
+                coef = jnp.asarray(data["coef"])
+                sqnorm = jnp.asarray(data["sqnorm"])
+                carry = None
+                if "carry_key" in data:
+                    state = CenterState(*(jnp.asarray(data[f"carry_{f}"])
+                                          for f in CenterState._fields))
+                    cmeta = meta["carry"]
+                    carry = FitCarry(state=state,
+                                     key=jnp.asarray(data["carry_key"]),
+                                     steps=cmeta["steps"],
+                                     iters=cmeta["iters"])
+        except (zipfile.BadZipFile, KeyError, OSError,
+                json.JSONDecodeError, EOFError, ValueError) as e:
+            # legacy (footer-less) files have no CRC; any undecodable
+            # container — truncated write, bit flip inside a zip member —
+            # surfaces as ONE clean error class, never garbage centers
+            raise SnapshotIntegrityError(
+                f"undecodable snapshot {path}: {e}") from e
         fmt = meta.get("format", 1)   # pre-compression files carry no key
-        if fmt > 2:
+        if fmt > 3:
             raise ValueError(f"snapshot format {fmt} is newer than this "
-                             "build understands (<= 2)")
+                             "build understands (<= 3)")
         cfg_dict = dict(meta["config"])
         cfg_dict["kernel"] = meta["kernel"]
         cfg_dict["kernel_params"] = meta["kernel_params"]

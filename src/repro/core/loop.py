@@ -106,6 +106,100 @@ def outcome_from_carry(carry: FitCarry) -> FitOutcome:
 
 
 # ---------------------------------------------------------------------------
+# The carry-guard axis (non-finite repair + dead-center reseed), registered
+# once — like the compress/precision hooks, the clean path is the identity.
+
+
+class CarryGuardReport(NamedTuple):
+    """What :func:`guard_carry` did to one carry.  ``patched`` counts
+    non-finite float entries zeroed across the state leaves; ``reseeded``
+    counts dead centers re-initialized from the dataset.  Both zero means
+    the carry was returned UNTOUCHED (same object — bit-identity by
+    construction)."""
+
+    patched: int
+    reseeded: int
+
+    @property
+    def clean(self) -> bool:
+        return self.patched == 0 and self.reseeded == 0
+
+
+def guard_carry(carry: Optional[FitCarry], *, x=None, kernel=None,
+                seed: int = 0, faults=None):
+    """THE carry-guard registration site: repair a host
+    :class:`FitCarry` whose center state went degenerate — non-finite
+    coefficients/norms/counts (a poisoned batch, a bad reduction, a
+    hardware fault) are zeroed, and DEAD centers (no finite nonzero
+    coefficient left — the empty-cluster instability Tang & Monteleoni
+    analyze for stochastic k-means) are reseeded as single data points
+    drawn deterministically from ``(seed, fit step, center)``.
+
+    A CLEAN carry is returned as the SAME object with a zero report —
+    callers on the clean path stay bit-identical to not calling the
+    guard at all (the ``compress="off"`` / ``cdt=None`` identity
+    convention).  Reseeding needs ``x`` (host dataset the carry's
+    indices refer to; non-finite rows are never picked) and ``kernel``
+    (for the reseeded center's ``sqnorm``); without them dead centers
+    are left zeroed but still counted.
+
+    ``faults``: an optional :class:`repro.service.faults.FaultPlan`
+    whose ``loop.carry`` site fires here — a ``nan`` event poisons the
+    carry deterministically BEFORE the check, so the chaos harness
+    exercises exactly this repair path."""
+    if carry is None:
+        return carry, CarryGuardReport(0, 0)
+    if faults is not None:
+        ev = faults.fire("loop.carry")
+        if ev is not None and ev.kind == "nan" and \
+                hasattr(carry.state, "coef"):
+            carry = carry._replace(state=carry.state._replace(
+                coef=faults.nan_leaf(np.asarray(carry.state.coef), ev)))
+    state = carry.state
+    if not hasattr(state, "coef"):          # only CenterState-shaped
+        return carry, CarryGuardReport(0, 0)
+    coef = np.asarray(state.coef)
+    sqnorm = np.asarray(state.sqnorm)
+    counts = np.asarray(state.counts)
+    fin_coef = np.isfinite(coef)
+    fin_sq = np.isfinite(sqnorm)
+    fin_ct = np.isfinite(counts)
+    patched = int((~fin_coef).sum() + (~fin_sq).sum() + (~fin_ct).sum())
+    dead = ~np.any(fin_coef & (coef != 0), axis=1)
+    if patched == 0 and not dead.any():
+        return carry, CarryGuardReport(0, 0)     # identity: same object
+    coef = np.where(fin_coef, coef, 0.0).astype(coef.dtype)
+    sqnorm = np.where(fin_sq, sqnorm, 0.0).astype(sqnorm.dtype)
+    counts = np.where(fin_ct, counts, 0.0).astype(counts.dtype)
+    idx = np.array(state.idx, copy=True)
+    head = np.array(state.head, copy=True)
+    reseeded = 0
+    if dead.any() and x is not None and kernel is not None:
+        from repro.core.kernel_fns import kernel_diag
+
+        xh = np.asarray(x)
+        ok_rows = np.flatnonzero(np.isfinite(xh).all(axis=1))
+        step = int(np.asarray(state.step))
+        for j in np.flatnonzero(dead):
+            if ok_rows.size == 0:
+                break
+            pick = int(ok_rows[int(np.random.default_rng(
+                (int(seed), step, int(j))).integers(0, ok_rows.size))])
+            idx[j] = 0
+            idx[j, 0] = pick
+            coef[j] = 0.0
+            coef[j, 0] = 1.0
+            head[j] = 1
+            sqnorm[j] = float(np.asarray(
+                kernel_diag(kernel, xh[pick:pick + 1]))[0])
+            counts[j] = 0.0
+            reseeded += 1
+    guarded = carry._replace(state=state._replace(
+        idx=idx, coef=coef, head=head, sqnorm=sqnorm, counts=counts))
+    return guarded, CarryGuardReport(patched, reseeded)
+
+
+# ---------------------------------------------------------------------------
 # Cross-executor compiled-program cache (the donation / program-cache axis).
 #
 # Executors cache their compiled programs on the instance, but the

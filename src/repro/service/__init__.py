@@ -20,16 +20,25 @@ around it:
   every counter (ingest/drops, queue depth, snapshot age/version,
   p50/p99 latency, compile counters, Gram-tile-cache hits).
 
-See docs/serving.md for the architecture and knobs, and
+* :mod:`repro.service.faults` — the deterministic chaos harness: a
+  :class:`FaultPlan` of (site, kind) rules whose every firing is a pure
+  function of (plan seed, site, occurrence index), threaded through all
+  of the above as no-op-by-default injection points.
+
+See docs/serving.md for the architecture and knobs, docs/robustness.md
+for the fault sites and recovery guarantees, and
 ``python -m repro.launch.serve --service`` for the demo.
 """
+from repro.api.estimator import SnapshotIntegrityError
 from repro.service.actor import Actor, Backpressure
 from repro.service.buffer import IngestBuffer
+from repro.service.faults import FaultPlan, FaultRule, InjectedFault
 from repro.service.learner import Learner
 from repro.service.snapshot import SnapshotStore, StaleSnapshot
 from repro.service import telemetry
 
 __all__ = [
-    "Actor", "Backpressure", "IngestBuffer", "Learner", "SnapshotStore",
+    "Actor", "Backpressure", "FaultPlan", "FaultRule", "IngestBuffer",
+    "InjectedFault", "Learner", "SnapshotIntegrityError", "SnapshotStore",
     "StaleSnapshot", "telemetry",
 ]

@@ -39,6 +39,7 @@ import jax
 import numpy as np
 
 from repro.core.minibatch import assign_chunked, center_distances_chunked
+from repro.service.faults import fire
 from repro.service.snapshot import SnapshotStore, StaleSnapshot
 from repro.service.telemetry import LatencyWindow
 
@@ -50,22 +51,39 @@ class Backpressure(RuntimeError):
 
 
 class _Request:
-    __slots__ = ("xq", "kind", "event", "result", "error", "t_submit")
+    __slots__ = ("xq", "kind", "event", "result", "error", "t_submit",
+                 "deadline", "cancelled")
 
-    def __init__(self, xq: np.ndarray, kind: str):
+    def __init__(self, xq: np.ndarray, kind: str,
+                 deadline_s: Optional[float] = None):
         self.xq = xq
         self.kind = kind                  # 'predict' | 'transform'
         self.event = threading.Event()
         self.result = None
         self.error: Optional[BaseException] = None
         self.t_submit = time.perf_counter()
+        self.deadline = (time.monotonic() + deadline_s
+                         if deadline_s is not None else None)
+        self.cancelled = False
 
     # ------------------------------------------------------ future-ish
     def done(self) -> bool:
         return self.event.is_set()
 
+    def cancel(self) -> None:
+        """Mark the request dead to the worker: a cancelled (or
+        deadline-expired) request is SKIPPED at serve time instead of
+        being padded, computed, and delivered to nobody."""
+        self.cancelled = True
+
+    def expired(self) -> bool:
+        return (self.cancelled
+                or (self.deadline is not None
+                    and time.monotonic() > self.deadline))
+
     def wait(self, timeout: Optional[float] = None):
         if not self.event.wait(timeout):
+            self.cancel()       # the worker skips us instead of serving
             raise TimeoutError("request not served within timeout")
         if self.error is not None:
             raise self.error
@@ -94,7 +112,9 @@ class Actor:
                  buckets: Sequence[int] = _DEFAULT_BUCKETS,
                  queue_depth: int = 128, max_wait_ms: float = 2.0,
                  max_staleness_s: Optional[float] = None,
-                 poll_every_s: float = 0.25, chunk: int = 4096):
+                 poll_every_s: float = 0.25, chunk: int = 4096,
+                 faults=None, swap_backoff_cap_s: float = 2.0,
+                 serve_retries: int = 1):
         if not buckets or list(buckets) != sorted(set(int(b)
                                                       for b in buckets)):
             raise ValueError("buckets must be ascending unique ints")
@@ -104,9 +124,13 @@ class Actor:
         self.max_staleness_s = max_staleness_s
         self.poll_every_s = float(poll_every_s)
         self.chunk = int(chunk)
+        self.faults = faults
+        self.swap_backoff_cap_s = float(swap_backoff_cap_s)
+        self.serve_retries = int(serve_retries)
 
         self._queue: "queue.Queue[_Request]" = queue.Queue(
             maxsize=int(queue_depth))
+        self._held: Optional[_Request] = None   # mismatched-kind head
         self._model_lock = threading.Lock()
         self._model = None                # (version, serving tuple)
         self._support = None              # support_stats() of served model
@@ -119,6 +143,9 @@ class Actor:
         self.served = 0
         self.rejected = 0
         self.swaps = 0
+        self.swap_failures = 0
+        self.cancel_skipped = 0
+        self.serve_retried = 0
         self.last_swap_pause_ms: Optional[float] = None
         self.stale = False
         self._last_poll = 0.0
@@ -165,7 +192,12 @@ class Actor:
     def try_swap(self, force: bool = False) -> bool:
         """Poll the store; acquire + warm + atomically swap in a newer
         snapshot.  Returns True when a swap happened.  Respects the
-        staleness bound; never touches the served model on failure."""
+        staleness bound; never touches the served model on failure.
+
+        The load goes through the store's integrity-checked fallback
+        path: a corrupt latest snapshot is quarantined and the newest
+        INTACT version is acquired instead — a corrupt file can delay a
+        swap but can never be swapped in."""
         latest = self.store.latest_version()
         cur = self.version
         if latest is None or (latest == cur and not force):
@@ -174,14 +206,16 @@ class Actor:
                 self.stale = age is None or age > self.max_staleness_s
             return False
         t0 = time.perf_counter()
+        fire(self.faults, "actor.swap")
         try:
-            v, est = self.store.load(latest,
-                                     max_age_s=self.max_staleness_s)
+            v, est = self.store.load(max_age_s=self.max_staleness_s)
         except StaleSnapshot:
             self.stale = True
             return False
         except FileNotFoundError:
             return False
+        if v == cur and not force:
+            return False        # the newest INTACT version is already in
         serving = self._serving_tuple(est)
         self._warm(serving, int(np.asarray(serving[1]).shape[-1]))
         with self._model_lock:
@@ -193,12 +227,15 @@ class Actor:
         return True
 
     # ---------------------------------------------------------- serving
-    def submit(self, xq, kind: str = "predict") -> _Request:
+    def submit(self, xq, kind: str = "predict",
+               deadline_s: Optional[float] = None) -> _Request:
         """Enqueue a query block; returns a future-like request.  Raises
-        :class:`Backpressure` when the admission queue is full."""
+        :class:`Backpressure` when the admission queue is full.  With
+        ``deadline_s``, the worker skips the request (instead of serving
+        it to nobody) once the deadline passes."""
         if kind not in ("predict", "transform"):
             raise ValueError(kind)
-        req = _Request(np.asarray(xq, np.float32), kind)
+        req = _Request(np.asarray(xq, np.float32), kind, deadline_s)
         try:
             self._queue.put_nowait(req)
         except queue.Full:
@@ -210,10 +247,11 @@ class Actor:
         return req
 
     def predict(self, xq, timeout: Optional[float] = 30.0):
-        return self.submit(xq, "predict").wait(timeout)
+        return self.submit(xq, "predict", deadline_s=timeout).wait(timeout)
 
     def transform(self, xq, timeout: Optional[float] = 30.0):
-        return self.submit(xq, "transform").wait(timeout)
+        return self.submit(xq, "transform",
+                           deadline_s=timeout).wait(timeout)
 
     # ------------------------------------------------------ worker loop
     def start(self) -> "Actor":
@@ -240,22 +278,46 @@ class Actor:
             if batch:
                 self._serve(batch)
 
+    def _swap_backoff_s(self, consec: int) -> float:
+        """Poll period, stretched exponentially (with deterministic
+        jitter keyed by the failure count) after ``consec`` consecutive
+        swap failures — a broken store is polled gently, not hot."""
+        if consec <= 0:
+            return self.poll_every_s
+        jitter = float(np.random.default_rng((0xB0FF, int(consec)))
+                       .random())
+        return min(self.swap_backoff_cap_s,
+                   self.poll_every_s * (2.0 ** consec)) * (1.0
+                                                           + 0.25 * jitter)
+
     def _swap_loop(self) -> None:
         """Load + warm off the serving path; the serving thread only ever
-        sees the finished swap (one locked assignment)."""
-        while not self._stop.wait(self.poll_every_s):
+        sees the finished swap (one locked assignment).  Failures are
+        COUNTED (``swap_failures``) and back the poll off — the actor
+        keeps serving its current model either way."""
+        consec = 0
+        while not self._stop.wait(self._swap_backoff_s(consec)):
             try:
                 self.try_swap()
             except Exception:           # noqa: BLE001 — keep serving
-                pass
+                self.swap_failures += 1
+                consec += 1
+            else:
+                consec = 0
 
     def _gather(self) -> list:
         """Pop one request (blocking briefly), then coalesce more until
-        the biggest bucket fills or ``max_wait_ms`` elapses."""
-        try:
-            first = self._queue.get(timeout=self.poll_every_s)
-        except queue.Empty:
-            return []
+        the biggest bucket fills or ``max_wait_ms`` elapses.  A
+        mismatched-kind request is HELD as the next microbatch's head —
+        never re-queued to the back (which would reorder admitted
+        requests and, on a full queue, error one with Backpressure)."""
+        if self._held is not None:
+            first, self._held = self._held, None
+        else:
+            try:
+                first = self._queue.get(timeout=self.poll_every_s)
+            except queue.Empty:
+                return []
         batch, rows = [first], first.xq.shape[0]
         deadline = time.monotonic() + self.max_wait_ms / 1e3
         limit = self.buckets[-1]
@@ -268,12 +330,7 @@ class Actor:
             except queue.Empty:
                 break
             if nxt.kind != first.kind:
-                # serve what we have; re-queue the mismatched request
-                try:
-                    self._queue.put_nowait(nxt)
-                except queue.Full:
-                    nxt.error = Backpressure("queue full during coalesce")
-                    nxt.event.set()
+                self._held = nxt        # head of the NEXT microbatch
                 break
             batch.append(nxt)
             rows += nxt.xq.shape[0]
@@ -286,6 +343,21 @@ class Actor:
         return self.buckets[-1]
 
     def _serve(self, batch: list) -> None:
+        # deadline check: a request whose caller already timed out (or
+        # cancelled) is skipped, not padded + computed + delivered to
+        # nobody
+        live = []
+        for req in batch:
+            if req.expired():
+                self.cancel_skipped += 1
+                req.error = TimeoutError(
+                    "request expired before serving")
+                req.event.set()
+            else:
+                live.append(req)
+        batch = live
+        if not batch:
+            return
         with self._model_lock:
             model = self._model
         if model is None:
@@ -297,24 +369,32 @@ class Actor:
         _, (kern, sup, coef, sqnorm) = model
         kind = batch[0].kind
         fn = self._assign if kind == "predict" else self._dists
-        try:
-            xq = np.concatenate([r.xq for r in batch], axis=0)
-            outs = []
-            for lo in range(0, xq.shape[0], self.buckets[-1]):
-                sl = xq[lo:lo + self.buckets[-1]]
-                bucket = self._bucket_for(sl.shape[0])
-                pad = bucket - sl.shape[0]
-                if pad:
-                    sl = np.concatenate(
-                        [sl, np.broadcast_to(sl[-1:], (pad,) + sl.shape[1:])])
-                out = fn(kern, coef, sqnorm, sup, sl, self.chunk)
-                outs.append(np.asarray(out)[:bucket - pad])
-            flat = np.concatenate(outs, axis=0)
-        except Exception as e:            # noqa: BLE001 — fail the batch
-            for req in batch:
-                req.error = e
-                req.event.set()
-            return
+        flat = None
+        for attempt in range(self.serve_retries + 1):
+            try:
+                fire(self.faults, "actor.serve")
+                xq = np.concatenate([r.xq for r in batch], axis=0)
+                outs = []
+                for lo in range(0, xq.shape[0], self.buckets[-1]):
+                    sl = xq[lo:lo + self.buckets[-1]]
+                    bucket = self._bucket_for(sl.shape[0])
+                    pad = bucket - sl.shape[0]
+                    if pad:
+                        sl = np.concatenate(
+                            [sl,
+                             np.broadcast_to(sl[-1:],
+                                             (pad,) + sl.shape[1:])])
+                    out = fn(kern, coef, sqnorm, sup, sl, self.chunk)
+                    outs.append(np.asarray(out)[:bucket - pad])
+                flat = np.concatenate(outs, axis=0)
+                break
+            except Exception as e:        # noqa: BLE001 — retry, then fail
+                if attempt >= self.serve_retries:
+                    for req in batch:
+                        req.error = e
+                        req.event.set()
+                    return
+                self.serve_retried += 1
         t_done = time.perf_counter()
         lo = 0
         for req in batch:
@@ -330,12 +410,16 @@ class Actor:
         return dict(depth=self._queue.qsize(),
                     capacity=self._queue.maxsize,
                     submitted=self.submitted, served=self.served,
-                    rejected=self.rejected)
+                    rejected=self.rejected,
+                    cancel_skipped=self.cancel_skipped,
+                    serve_retried=self.serve_retried)
 
     def snapshot_stats(self) -> dict:
         return dict(version=self.version,
                     age_s=self.store.age_s(self.version),
                     swaps=self.swaps,
+                    swap_failures=self.swap_failures,
+                    quarantined=self.store.quarantined,
                     last_swap_pause_ms=self.last_swap_pause_ms,
                     stale=self.stale)
 

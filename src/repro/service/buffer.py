@@ -55,7 +55,7 @@ class IngestBuffer:
 
     def __init__(self, capacity: int, dim: int, seed: int = 0,
                  mode: str = "reservoir", reuse: float = 0.5,
-                 refresh: int = 8, dtype=np.float32):
+                 refresh: int = 8, dtype=np.float32, faults=None):
         if mode not in _MODES:
             raise ValueError(f"mode={mode!r} not in {_MODES}")
         if capacity <= 0:
@@ -63,6 +63,7 @@ class IngestBuffer:
         self.capacity, self.dim, self.seed = int(capacity), int(dim), seed
         self.mode, self.reuse, self.refresh = mode, float(reuse), int(refresh)
         self.dtype = np.dtype(dtype)
+        self.faults = faults
         self.reset()
 
     # ------------------------------------------------------------- state
@@ -100,6 +101,16 @@ class IngestBuffer:
         if pts.ndim != 2 or pts.shape[1] != self.dim:
             raise ValueError(f"expected (m, {self.dim}) arrivals, got "
                              f"{pts.shape}")
+        if self.faults is not None:
+            # keyed by PUSH INDEX (not a call counter) so a crash-recovery
+            # replay_to re-fires the exact same faults at the exact same
+            # pushes — buffer purity in (seed, pushes) extends to the
+            # injected degenerate arrivals
+            from repro.service.faults import fire
+
+            ev = fire(self.faults, "buffer.push", index=self.pushes)
+            if ev is not None and ev.kind == "nan":
+                pts = self.faults.nan_rows(pts, ev)
         took = (self._push_reservoir(pts) if self.mode == "reservoir"
                 else self._push_nested(pts))
         self.pushed += pts.shape[0]

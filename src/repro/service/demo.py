@@ -45,11 +45,15 @@ def build_service(snapshot_dir: str, *, k: int = 8, d: int = 16,
                   arrivals_per_step: int = 512, seed: int = 0,
                   buckets=(64, 256, 1024), queue_depth: int = 256,
                   max_wait_ms: float = 2.0, max_staleness_s=None,
-                  log_every: int = 0, compress="off"):
+                  log_every: int = 0, compress="off", faults=None,
+                  step_timeout_s=None):
     """Wire (learner, actor, store, buffer, source) — unstarted.
     ``compress``: the SolverConfig landmark axis — e.g. ``{"m": 32}``
     makes the learner compress every round, so all published snapshots
-    serve at O(k*m) (docs/compression.md)."""
+    serve at O(k*m) (docs/compression.md).  ``faults``: one
+    :class:`repro.service.faults.FaultPlan` shared by every component
+    (None — the default — leaves all injection points dead);
+    ``step_timeout_s`` arms the learner's watchdog."""
     from repro.api import KernelKMeans, SolverConfig
 
     cfg = SolverConfig(k=k, batch_size=batch_size, tau=tau,
@@ -59,15 +63,18 @@ def build_service(snapshot_dir: str, *, k: int = 8, d: int = 16,
                        distribution="single", jit=True,
                        compress=compress)
     est = KernelKMeans(cfg)
-    store = SnapshotStore(snapshot_dir)
-    buf = IngestBuffer(capacity, d, seed=seed, mode=buffer_mode)
+    store = SnapshotStore(snapshot_dir, faults=faults)
+    buf = IngestBuffer(capacity, d, seed=seed, mode=buffer_mode,
+                       faults=faults)
     source = make_source(d, k, arrivals_per_step, seed=seed)
     learner = Learner(est, buf, source, store,
                       iters_per_round=iters_per_round,
                       publish_every=publish_every, seed=seed,
-                      log_every=log_every)
+                      log_every=log_every, faults=faults,
+                      step_timeout_s=step_timeout_s)
     actor = Actor(store, buckets=buckets, queue_depth=queue_depth,
-                  max_wait_ms=max_wait_ms, max_staleness_s=max_staleness_s)
+                  max_wait_ms=max_wait_ms, max_staleness_s=max_staleness_s,
+                  faults=faults)
     return learner, actor, store, buf, source
 
 

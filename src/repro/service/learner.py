@@ -37,6 +37,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.service.buffer import IngestBuffer
+from repro.service.faults import fire
 from repro.service.snapshot import SnapshotStore
 
 
@@ -67,7 +68,9 @@ class Learner:
                  publish_every: int = 5,
                  warmup_pushes: Optional[int] = None, seed: int = 0,
                  on_round: Optional[Callable[[int], None]] = None,
-                 log_every: int = 0):
+                 log_every: int = 0, faults=None,
+                 step_timeout_s: Optional[float] = None,
+                 backoff_base_s: float = 0.0):
         self.est = estimator
         self.buffer = buffer
         self.source = source
@@ -79,6 +82,9 @@ class Learner:
         self.seed = seed
         self.on_round = on_round
         self.log_every = int(log_every)
+        self.faults = faults
+        self.step_timeout_s = step_timeout_s
+        self.backoff_base_s = float(backoff_base_s)
         if warmup_pushes is None:
             warmup_pushes = (buffer.capacity if buffer.mode == "reservoir"
                              else 1)
@@ -86,6 +92,11 @@ class Learner:
         self.rounds = 0
         self.restores = 0
         self.last_improvement = None
+        # degraded-mode counters: run_resilient fills events, the carry
+        # guard fills guard_* — all surfaced via stats()/telemetry.poll()
+        self.events: dict = {}
+        self.guard_patched = 0
+        self.guard_reseeded = 0
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
@@ -103,11 +114,13 @@ class Learner:
         cold start (initial ``fit`` draws init + key stream from
         ``seed``); afterwards the carry is always HOST-materialized, so
         the donating resume program can never invalidate it."""
+        fire(self.faults, "learner.step")
         if carry is None:
             self.est.fit(xbuf, key=self.seed)
         else:
             self.est.restore_carry(carry)
             self.est.partial_fit(xbuf, iters=self.iters_per_round)
+        self._guard(xbuf)
         if self.est.config.compress != "off":
             # round-cadence landmark compression: every published snapshot
             # carries the O(k*m) serving representation (stable serving
@@ -128,6 +141,29 @@ class Learner:
                   flush=True)
         return self.est.snapshot_carry(), {"iters": int(self.est.iters_)}
 
+    def _guard(self, xbuf: np.ndarray) -> None:
+        """Non-finite-carry guard + dead-center reseed through the loop
+        core (:func:`repro.core.loop.guard_carry`): degenerate arrivals
+        (all-NaN rows, empty clusters — Tang & Monteleoni's stochastic
+        k-means instability) can zero or poison center coefficients; the
+        guard repairs the carry BEFORE it is compressed, published, or
+        resumed.  Clean carries pass through untouched (same object), so
+        the healthy path stays bit-identical."""
+        from repro.core.loop import guard_carry
+
+        host = self.est.snapshot_carry()
+        if host is None:
+            return
+        kernel = (self.est.plan_.executor.kernel
+                  if self.est.plan_ is not None else None)
+        guarded, rep = guard_carry(host, x=xbuf, kernel=kernel,
+                                   seed=self.seed, faults=self.faults)
+        if rep.clean:
+            return
+        self.guard_patched += rep.patched
+        self.guard_reseeded += rep.reseeded
+        self.est.restore_carry(guarded)
+
     # --------------------------------------------------------------- run
     def run(self, n_rounds: int, max_restarts: int = 3,
             publish_final: bool = True):
@@ -141,10 +177,15 @@ class Learner:
             self.restores += 1
             self.rounds = version
 
+        on_watchdog = (self.faults.abort_hangs
+                       if self.faults is not None else None)
         carry, _ = run_resilient(
             self._step, self._round_buffer, None, n_rounds, ckpt,
             ckpt_every=self.publish_every, max_restarts=max_restarts,
-            on_restore=on_restore)
+            on_restore=on_restore, step_timeout_s=self.step_timeout_s,
+            backoff_base_s=self.backoff_base_s,
+            backoff_seed=int(self.seed) if np.isscalar(self.seed) else 0,
+            on_watchdog=on_watchdog, events=self.events)
         if publish_final and self.rounds % self.publish_every != 0:
             self.store.publish(self.est, self.rounds)
         return carry
@@ -186,7 +227,14 @@ class Learner:
     def stats(self) -> dict:
         return dict(rounds=self.rounds, publishes=self.store.publishes,
                     restores=self.restores,
-                    last_improvement=self.last_improvement)
+                    last_improvement=self.last_improvement,
+                    watchdog_fires=int(self.events.get(
+                        "watchdog_fires", 0)),
+                    restore_fallbacks=int(self.events.get(
+                        "restore_fallbacks", 0)
+                        + self.store.load_fallbacks),
+                    guard_patched=self.guard_patched,
+                    guard_reseeded=self.guard_reseeded)
 
 
 class _Stopped(BaseException):

@@ -31,6 +31,8 @@ from typing import Any, Optional
 
 import numpy as np
 
+from repro.service.faults import fire
+
 _SNAP_RE = re.compile(r"^snapshot_(\d+)\.npz$")
 
 
@@ -41,13 +43,30 @@ class StaleSnapshot(RuntimeError):
 class SnapshotStore:
     """Directory of ``snapshot_<version>.npz`` files + a ``LATEST``
     pointer, all updated write-temp-then-rename.  ``keep`` bounds disk use
-    (older versions are pruned after a successful publish)."""
+    (older versions are pruned after a successful publish).
 
-    def __init__(self, directory: str, keep: int = 4):
+    Hardening (PR 10): publishes retry transient ``OSError``s with
+    deterministic backoff; loads verify the format-3 CRC footer, move any
+    corrupt file aside to ``*.corrupt`` (``quarantined`` counts them) and
+    FALL BACK through older intact versions (``load_fallbacks``) instead
+    of raising — a reader never serves garbage centers and never dies to
+    one rotten file while an older good one exists.  ``faults`` is the
+    chaos harness hook (:mod:`repro.service.faults`); None — the default —
+    keeps every path bit-identical to the un-instrumented store."""
+
+    def __init__(self, directory: str, keep: int = 4, faults=None,
+                 publish_retries: int = 2,
+                 retry_backoff_s: float = 0.01):
         self.dir = directory
         self.keep = int(keep)
+        self.faults = faults
+        self.publish_retries = int(publish_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
         os.makedirs(directory, exist_ok=True)
         self.publishes = 0
+        self.publish_errors = 0
+        self.quarantined = 0
+        self.load_fallbacks = 0
 
     # ------------------------------------------------------------ paths
     def path_for(self, version: int) -> str:
@@ -59,11 +78,32 @@ class SnapshotStore:
     # ---------------------------------------------------------- publish
     def publish(self, estimator, version: int) -> str:
         """Atomically publish ``estimator``'s full snapshot (serving
-        tuple + resumable carry) as ``version``.  Returns the path."""
+        tuple + resumable carry) as ``version``.  Returns the path.
+
+        Transient ``OSError``s (flaky disk / NFS, or the chaos harness's
+        ``io`` fault at ``snapshot.publish``) are retried up to
+        ``publish_retries`` times with deterministic exponential backoff
+        — only then does the error propagate to the learner's recovery
+        path."""
         dst = self.path_for(version)
         tmp = dst + f".tmp.{os.getpid()}"
-        estimator.save(tmp)
-        self._replace(tmp, dst)
+        attempt = 0
+        while True:
+            try:
+                ev = fire(self.faults, "snapshot.publish")
+                estimator.save(tmp)
+                self._replace(tmp, dst)
+                break
+            except OSError:
+                self.publish_errors += 1
+                attempt += 1
+                if attempt > self.publish_retries:
+                    raise
+                time.sleep(self.retry_backoff_s * (2.0 ** (attempt - 1)))
+        if ev is not None and ev.kind == "corrupt":
+            # injected disk rot lands on the PUBLISHED file — the read
+            # path's CRC check + quarantine + fallback must absorb it
+            self.faults.corrupt_file(dst, ev)
         ptr = os.path.join(self.dir, "LATEST")
         with open(ptr + f".tmp.{os.getpid()}", "w") as f:
             json.dump({"version": int(version), "time": time.time()}, f)
@@ -97,7 +137,12 @@ class SnapshotStore:
         except (OSError, ValueError, KeyError):
             vs = self.versions()
             return vs[-1] if vs else None
-        return v if os.path.exists(self.path_for(v)) else None
+        if os.path.exists(self.path_for(v)):
+            return v
+        # pointer target gone (pruned or quarantined) — fall back to the
+        # newest file actually on disk rather than reporting an empty store
+        vs = self.versions()
+        return vs[-1] if vs else None
 
     def age_s(self, version: Optional[int] = None) -> Optional[float]:
         """Seconds since ``version`` (default: latest) was published."""
@@ -109,14 +154,56 @@ class SnapshotStore:
         except OSError:
             return None
 
+    def _quarantine(self, version: int) -> None:
+        """Move a failed-integrity snapshot aside to ``*.corrupt`` so it
+        leaves the version chain (``versions()`` no longer lists it) but
+        stays on disk for post-mortem."""
+        p = self.path_for(version)
+        try:
+            os.replace(p, p + ".corrupt")
+            self.quarantined += 1
+        except OSError:
+            pass
+
+    def load_version(self, version: int):
+        """Load exactly ``version`` with integrity checking: a CRC
+        mismatch or undecodable container quarantines the file and
+        re-raises :class:`~repro.api.estimator.SnapshotIntegrityError`."""
+        from repro.api import KernelKMeans
+        from repro.api.estimator import SnapshotIntegrityError
+
+        path = self.path_for(version)
+        ev = fire(self.faults, "snapshot.load")
+        if ev is not None and ev.kind == "corrupt" \
+                and os.path.exists(path):
+            self.faults.corrupt_file(path, ev)
+        try:
+            return KernelKMeans.load(path)
+        except SnapshotIntegrityError:
+            self._quarantine(version)
+            raise
+
     def load(self, version: Optional[int] = None,
              max_age_s: Optional[float] = None):
         """``(version, KernelKMeans)`` for ``version`` (default latest).
         With ``max_age_s``, a snapshot older than the bound raises
-        :class:`StaleSnapshot` instead of loading."""
-        from repro.api import KernelKMeans
+        :class:`StaleSnapshot` instead of loading.
 
-        v = self.latest_version() if version is None else version
+        An EXPLICIT ``version`` is loaded as-is (integrity failures
+        quarantine + raise).  The default (latest) FALLS BACK through
+        older intact versions when the newest is corrupt or unreadable —
+        each skipped version counts as a ``load_fallback`` — and only
+        raises when no version on disk survives."""
+        if version is not None:
+            if max_age_s is not None:
+                age = self.age_s(version)
+                if age is None or age > max_age_s:
+                    raise StaleSnapshot(
+                        f"snapshot v{version} is "
+                        f"{age if age is not None else '?'}s old "
+                        f"(bound {max_age_s}s)")
+            return version, self.load_version(version)
+        v = self.latest_version()
         if v is None:
             raise FileNotFoundError(f"no snapshot in {self.dir}")
         if max_age_s is not None:
@@ -125,7 +212,28 @@ class SnapshotStore:
                 raise StaleSnapshot(
                     f"snapshot v{v} is {age if age is not None else '?'}s "
                     f"old (bound {max_age_s}s)")
-        return v, KernelKMeans.load(self.path_for(v))
+        from repro.api.estimator import SnapshotIntegrityError
+
+        tried: set = set()
+        last_err: Optional[Exception] = None
+        while True:
+            cands = [c for c in sorted(self.versions(), reverse=True)
+                     if c not in tried]
+            if not cands:
+                if last_err is not None:
+                    raise last_err
+                raise FileNotFoundError(f"no snapshot in {self.dir}")
+            c = cands[0]
+            tried.add(c)
+            try:
+                est = self.load_version(c)
+            except (SnapshotIntegrityError, OSError) as e:
+                # corrupt (already quarantined) or transiently unreadable
+                # — fall back to the next older version
+                self.load_fallbacks += 1
+                last_err = e
+                continue
+            return c, est
 
     # ------------------------------- Checkpointer protocol (resilience)
     def as_checkpointer(self, estimator) -> "_SnapshotCheckpointer":
@@ -153,11 +261,18 @@ class _SnapshotCheckpointer:
     def latest_step(self) -> Optional[int]:
         return self.store.latest_version()
 
+    def steps(self) -> list:
+        # run_resilient's restore-fallback chain: every intact version on
+        # disk (quarantined files already left versions())
+        return self.store.versions()
+
     def restore(self, step: int, like: Any, shardings: Any = None):
-        from repro.api import KernelKMeans
         from repro.api.executors import carry_of
 
-        loaded = KernelKMeans.load(self.store.path_for(step))
+        # load_version: CRC-checked, quarantines on corruption — the
+        # raised SnapshotIntegrityError sends run_resilient to the next
+        # older step in steps()
+        loaded = self.store.load_version(step)
         carry = carry_of(loaded._outcome)
         if carry is None:
             raise ValueError(f"snapshot v{step} carries no resumable "

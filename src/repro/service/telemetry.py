@@ -9,10 +9,14 @@ path all report the same way:
       "programs": {"fit_builds": int, "serve_compiles": int | None},
       "cache":    {hits, misses, evictions, hit_rate, evals, ...} | None,
       "ingest":   {mode, capacity, pushes, pushed, admitted, dropped, full},
-      "queue":    {depth, capacity, submitted, served, rejected},
-      "snapshot": {version, age_s, swaps, last_swap_pause_ms, stale},
+      "queue":    {depth, capacity, submitted, served, rejected,
+                   cancel_skipped, serve_retried},
+      "snapshot": {version, age_s, swaps, swap_failures, quarantined,
+                   last_swap_pause_ms, stale},
       "latency_ms": {p50, p99, count},
-      "learner":  {rounds, publishes, restores, last_improvement},
+      "learner":  {rounds, publishes, restores, watchdog_fires,
+                   restore_fallbacks, guard_patched, guard_reseeded,
+                   last_improvement},
       "support":  {rows, active, window, k, compressions, m, last_drift,
                    ratio},
     }
@@ -142,12 +146,21 @@ def format_line(t: dict) -> str:
                      f"drop={ing['dropped']}")
     lrn = t.get("learner")
     if lrn:
-        parts.append(f"learner rounds={lrn['rounds']} "
-                     f"pub={lrn['publishes']} restore={lrn['restores']}")
+        line = (f"learner rounds={lrn['rounds']} "
+                f"pub={lrn['publishes']} restore={lrn['restores']}")
+        # degraded-mode counters appear only once nonzero — the healthy
+        # heartbeat stays short
+        degraded = {"wd": lrn.get("watchdog_fires"),
+                    "fb": lrn.get("restore_fallbacks"),
+                    "guard": lrn.get("guard_reseeded")}
+        extra = " ".join(f"{k}={v}" for k, v in degraded.items() if v)
+        parts.append(line + (" " + extra if extra else ""))
     q = t.get("queue")
     if q:
         parts.append(f"queue {q['depth']}/{q['capacity']} "
-                     f"served={q['served']} rej={q['rejected']}")
+                     f"served={q['served']} rej={q['rejected']}"
+                     + (f" cancel={q['cancel_skipped']}"
+                        if q.get("cancel_skipped") else ""))
     snap = t.get("snapshot")
     if snap:
         v = snap["version"]
@@ -155,6 +168,10 @@ def format_line(t: dict) -> str:
                      f" age={_fmt(snap['age_s'])}s "
                      f"swaps={snap['swaps']} "
                      f"pause={_fmt(snap['last_swap_pause_ms'])}ms"
+                     + (f" fail={snap['swap_failures']}"
+                        if snap.get("swap_failures") else "")
+                     + (f" quar={snap['quarantined']}"
+                        if snap.get("quarantined") else "")
                      + (" STALE" if snap.get("stale") else ""))
     lat = t.get("latency_ms")
     if lat:

@@ -76,6 +76,20 @@ class Checkpointer:
         with open(p) as f:
             return int(f.read().strip())
 
+    def steps(self) -> list:
+        """Every step with a checkpoint file on disk, ascending — the
+        restore-fallback chain for :mod:`repro.train.resilience` when the
+        newest checkpoint turns out to be corrupt."""
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("ckpt_") and name.endswith(".npz") \
+                    and ".tmp." not in name:
+                try:
+                    out.append(int(name[len("ckpt_"):-len(".npz")]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
     def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
         """`like`: a pytree (arrays or ShapeDtypeStructs) defining the
         structure; `shardings`: optional matching tree of NamedShardings for

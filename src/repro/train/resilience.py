@@ -1,5 +1,6 @@
-"""Fault tolerance: watchdog-driven train loop with checkpoint/restart and
-(simulated) straggler / failure handling.
+"""Fault tolerance: watchdog-driven train loop with checkpoint/restart,
+restore fallback through older checkpoints, and deterministic restart
+backoff.
 
 On a real cluster the failure signal is a missing heartbeat or a collective
 timeout; here `run_resilient` accepts any step callable that may raise, and
@@ -7,18 +8,128 @@ the recovery path — restore last checkpoint, (optionally) shrink the mesh,
 replay the deterministic data stream — is identical to production.  Because
 every batch is a pure function of (seed, step) (data/pipeline.py) and the
 optimizer is deterministic, a crash-recovery run converges to EXACTLY the
-same state as an uninterrupted run (asserted in tests).
+same state as an uninterrupted run (asserted in tests), even when the
+restore had to fall back past a corrupt checkpoint to an older one.
+
+The watchdog is REAL: with ``step_timeout_s`` set, each step runs on a
+dedicated worker thread and the driver waits on its completion with a
+deadline — a step that HANGS (never returns) raises :class:`StepTimeout`
+at the deadline and takes the restore path, instead of only being noticed
+after it eventually completes.  The hung worker is abandoned (its late
+result, success or exception, is discarded by generation tag); callers
+injecting hangs should abort them via ``on_watchdog`` (the chaos
+harness's :meth:`FaultPlan.abort_hangs`) so abandoned threads die rather
+than linger — on real pods this is where the slow host gets excluded and
+the mesh shrinks.
 """
 from __future__ import annotations
 
+import queue
+import threading
 import time
 from typing import Any, Callable, Optional
 
+import numpy as np
+
 from repro.train.checkpoint import Checkpointer
+
+# every counter run_resilient maintains in its ``events`` dict
+EVENT_KEYS = ("restarts", "watchdog_fires", "restore_fallbacks",
+              "backoff_s")
 
 
 class StepTimeout(RuntimeError):
     """Raised by the watchdog when a step exceeds the straggler budget."""
+
+
+class _StepWorker:
+    """One persistent worker thread executing steps on behalf of the
+    watchdog.  Results carry a generation tag; when the driver times out
+    and abandons a step, the worker's eventual (late) result is discarded
+    by tag mismatch and a fresh thread takes over — the abandoned thread
+    finishes (or dies on an aborted injected hang) in the background."""
+
+    def __init__(self):
+        self._req: "queue.Queue" = queue.Queue()
+        self._res: "queue.Queue" = queue.Queue()
+        self._gen = 0
+        self._thread: Optional[threading.Thread] = None
+
+    def _ensure(self) -> None:
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._loop, daemon=True,
+                name="resilience-step-worker")
+            self._thread.start()
+
+    def _loop(self) -> None:
+        while True:
+            gen, fn, args = self._req.get()
+            try:
+                out = (gen, True, fn(*args))
+            except BaseException as e:     # noqa: BLE001 — relayed below
+                out = (gen, False, e)
+            self._res.put(out)
+
+    def call(self, fn: Callable, args: tuple, timeout_s: float):
+        """Run ``fn(*args)`` with a hard deadline; re-raises the step's
+        own exception (including BaseException-derived cooperative-stop
+        signals) on the calling thread, or :class:`StepTimeout` when the
+        deadline passes first."""
+        self._ensure()
+        self._gen += 1
+        gen = self._gen
+        self._req.put((gen, fn, args))
+        deadline = time.monotonic() + timeout_s
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                # abandon: a hung thread can't be killed, but its late
+                # result is discarded and a fresh worker takes over
+                self._thread = None
+                raise StepTimeout(
+                    f"step exceeded the {timeout_s:.3f}s watchdog budget")
+            try:
+                g, ok, val = self._res.get(timeout=remaining)
+            except queue.Empty:
+                continue
+            if g != gen:                   # stale result of an abandoned step
+                continue
+            if ok:
+                return val
+            raise val
+
+
+def _backoff_s(restarts: int, base_s: float, cap_s: float,
+               seed: int) -> float:
+    """Exponential backoff with DETERMINISTIC jitter: a pure function of
+    (seed, restart count), so chaos runs replay the same waits."""
+    if base_s <= 0.0:
+        return 0.0
+    jitter = float(np.random.default_rng((int(seed), 0xB0FF,
+                                          int(restarts))).random())
+    return min(cap_s, base_s * (2.0 ** (restarts - 1))) * (1.0
+                                                           + 0.25 * jitter)
+
+
+def _restore_latest(ckpt, like, shardings, initial_state, events):
+    """Restore the newest intact checkpoint, falling back through older
+    ones when a restore raises (corrupt file, missing leaf) — each
+    skipped checkpoint counts as a ``restore_fallback``.  Returns
+    ``(state, step)``; ``(initial_state, 0)`` when nothing restores."""
+    steps_fn = getattr(ckpt, "steps", None)
+    if steps_fn is not None:
+        avail = sorted(int(s) for s in steps_fn())[::-1]
+    else:
+        last = ckpt.latest_step() or 0
+        avail = [last] if last > 0 else []
+    for s in avail:
+        try:
+            return ckpt.restore(s, like, shardings), s
+        except Exception:  # noqa: BLE001 — fall back to the next older
+            events["restore_fallbacks"] += 1
+            continue
+    return initial_state, 0
 
 
 def run_resilient(step_fn: Callable[[Any, Any], tuple],
@@ -31,14 +142,33 @@ def run_resilient(step_fn: Callable[[Any, Any], tuple],
                   step_timeout_s: Optional[float] = None,
                   make_state_like: Optional[Callable[[], Any]] = None,
                   shardings: Any = None,
-                  on_restore: Optional[Callable[[int], None]] = None):
+                  on_restore: Optional[Callable[[int], None]] = None,
+                  backoff_base_s: float = 0.0,
+                  backoff_cap_s: float = 5.0,
+                  backoff_seed: int = 0,
+                  on_watchdog: Optional[Callable[[], None]] = None,
+                  events: Optional[dict] = None):
     """Drive `state = step_fn(state, batch)` for n_steps with recovery.
 
-    Straggler mitigation: if `step_timeout_s` is set, a step whose host
-    wall-time exceeds it raises StepTimeout and takes the same
-    restore-and-retry path as a crash (on real pods: exclude the slow host
-    and restore onto the shrunk mesh via `shardings`).
+    Straggler/hang mitigation: with `step_timeout_s` set, every step runs
+    under the watchdog worker — a step that hangs raises StepTimeout AT
+    the deadline (not after it returns) and takes the same
+    restore-and-retry path as a crash (on real pods: exclude the slow
+    host and restore onto the shrunk mesh via `shardings`).
+    `on_watchdog` fires on each timeout, before the restore.
+
+    Recovery hardening: restores FALL BACK through older checkpoints when
+    the newest fails to restore (`ckpt.steps()` when available), restarts
+    are spaced by exponential backoff with deterministic jitter
+    (`backoff_base_s`; default 0 keeps tests instant), and `events` (a
+    caller-owned dict) accumulates `restarts` / `watchdog_fires` /
+    `restore_fallbacks` / `backoff_s` for degraded-mode telemetry.
     """
+    if events is None:
+        events = {}
+    for k in EVENT_KEYS:
+        events.setdefault(k, 0.0 if k == "backoff_s" else 0)
+    worker = _StepWorker() if step_timeout_s is not None else None
     initial_state = state    # recovery target when no checkpoint exists yet
     start = 0
     restarts = 0
@@ -46,12 +176,18 @@ def run_resilient(step_fn: Callable[[Any, Any], tuple],
     while start < n_steps:
         try:
             for step in range(start, n_steps):
-                t0 = time.monotonic()
                 batch = pipeline(step)
-                state, metrics = step_fn(state, batch)
-                dt = time.monotonic() - t0
-                if step_timeout_s is not None and dt > step_timeout_s:
-                    raise StepTimeout(f"step {step} took {dt:.3f}s")
+                if worker is not None:
+                    try:
+                        state, metrics = worker.call(
+                            step_fn, (state, batch), step_timeout_s)
+                    except StepTimeout:
+                        events["watchdog_fires"] += 1
+                        if on_watchdog is not None:
+                            on_watchdog()
+                        raise
+                else:
+                    state, metrics = step_fn(state, batch)
                 history.append({"step": step, **{
                     k: float(v) for k, v in metrics.items()}})
                 if (step + 1) % ckpt_every == 0:
@@ -59,16 +195,19 @@ def run_resilient(step_fn: Callable[[Any, Any], tuple],
             start = n_steps
         except Exception:  # noqa: BLE001 — any failure triggers recovery
             restarts += 1
+            events["restarts"] += 1
             if restarts > max_restarts:
                 raise
             ckpt.wait()
-            last = ckpt.latest_step() or 0
-            if last > 0:
-                like = (make_state_like() if make_state_like is not None
-                        else state)
-                state = ckpt.restore(last, like, shardings)
-            else:
-                state = initial_state
+            wait_s = _backoff_s(restarts, backoff_base_s, backoff_cap_s,
+                                backoff_seed)
+            if wait_s > 0.0:
+                events["backoff_s"] += wait_s
+                time.sleep(wait_s)
+            like = (make_state_like() if make_state_like is not None
+                    else state)
+            state, last = _restore_latest(ckpt, like, shardings,
+                                          initial_state, events)
             if on_restore is not None:
                 on_restore(last)
             history = [h for h in history if h["step"] < last]
